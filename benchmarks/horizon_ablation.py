@@ -1,0 +1,25 @@
+"""Beyond-paper ablation: fixed pruning horizon τ (paper) vs the
+adaptive-τ extension the paper proposes as future work (§5) — τ scaled
+by mean branch entropy at the draft cutoff."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(cfg, params):
+    rows = []
+    n = common.NS[-1]
+    for name, kw in [("fixed", {}),
+                     ("adaptive", {"adaptive_horizon": True}),
+                     ("adaptive_b05", {"adaptive_horizon": True,
+                                       "horizon_beta": 0.5})]:
+        r = common.eval_method(cfg, params, "kappa", n, kcfg_kw=kw)
+        r["variant"] = name
+        rows.append(r)
+    return rows
+
+
+def emit_csv(rows):
+    return [f"horizon_ablation/{r['variant']}_N{r['n']},0,"
+            f"acc={r['accuracy']:.3f};total_toks={r['total_tokens']:.1f};"
+            f"peak_mb={r['peak_memory_mb']:.3f}" for r in rows]

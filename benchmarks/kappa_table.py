@@ -1,0 +1,26 @@
+"""Paper Appendix A table: Accuracy / Final-Branch Tokens / Total Tokens /
+Peak Memory for Greedy, BoN, ST-BoN, KAPPA at N ∈ {5,10,20}."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(cfg, params):
+    rows = []
+    rows.append(common.eval_method(cfg, params, "greedy", 1))
+    for method in ["bon", "stbon", "kappa"]:
+        for n in common.NS:
+            rows.append(common.eval_method(cfg, params, method, n))
+    return rows
+
+
+def emit_csv(rows):
+    out = []
+    for r in rows:
+        name = f"kappa_table/{r['method']}_N{r['n']}"
+        us = r["time_s"] * 1e6 / max(r["total_tokens"], 1)
+        derived = (f"acc={r['accuracy']:.3f};total_toks={r['total_tokens']:.1f};"
+                   f"final_toks={r['final_branch_tokens']:.1f};"
+                   f"peak_mb={r['peak_memory_mb']:.3f}")
+        out.append(f"{name},{us:.1f},{derived}")
+    return out

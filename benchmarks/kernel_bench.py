@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: wall-time of the jnp oracle path on CPU (the
+Pallas kernels themselves run in interpret mode here — TPU wall-time is
+the dry-run/roofline's job) + derived per-call traffic, proving the
+fusion arithmetic: fused_score reads the logits row once vs 4×."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.signals import compute_signals, log_softmax, reference_log_q
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(cfg=None, params=None):
+    rows = []
+    for B, V in [(5, 50_000), (20, 150_000)]:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(B))
+        logits = jax.random.normal(k1, (B, V))
+        log_q = reference_log_q(jax.random.normal(k2, (V,)))
+
+        fused = jax.jit(lambda l, q: compute_signals(l, q))
+        us_fused = _time(fused, logits, log_q)
+
+        def separate(l, q):
+            lp = log_softmax(l)
+            p = jnp.exp(lp)
+            kl = jnp.sum(p * (lp - q), -1)
+            conf = jnp.max(p, -1)
+            ent = -jnp.sum(p * jnp.log(p + 1e-9), -1)
+            return kl, conf, ent
+
+        us_sep = _time(jax.jit(separate), logits, log_q)
+        bytes_once = B * V * 4
+        rows.append({"name": f"signals_B{B}_V{V}", "us_fused": us_fused,
+                     "us_separate": us_sep, "row_bytes": bytes_once})
+    return rows
+
+
+def emit_csv(rows):
+    return [f"kernel_bench/{r['name']},{r['us_fused']:.1f},"
+            f"separate_us={r['us_separate']:.1f};row_bytes={r['row_bytes']}"
+            for r in rows]

@@ -1,0 +1,24 @@
+"""Paper Fig. 2: peak-memory reduction ratio of KAPPA vs BoN per N."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(cfg, params):
+    rows = []
+    for n in common.NS:
+        bon = common.eval_method(cfg, params, "bon", n)
+        kap = common.eval_method(cfg, params, "kappa", n)
+        rows.append({
+            "n": n,
+            "bon_peak_mb": bon["peak_memory_mb"],
+            "kappa_peak_mb": kap["peak_memory_mb"],
+            "reduction": 1.0 - kap["peak_memory_mb"] / bon["peak_memory_mb"],
+        })
+    return rows
+
+
+def emit_csv(rows):
+    return [f"memory_ratio/N{r['n']},0,"
+            f"reduction={r['reduction']:.3f};bon_mb={r['bon_peak_mb']:.3f};"
+            f"kappa_mb={r['kappa_peak_mb']:.3f}" for r in rows]

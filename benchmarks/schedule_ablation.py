@@ -1,0 +1,22 @@
+"""§4.2 ablation: linear (paper) vs cosine (paper's suggested gentler
+variant) vs step pruning schedules."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(cfg, params):
+    rows = []
+    n = common.NS[-1]
+    for sched in ["linear", "cosine", "step"]:
+        r = common.eval_method(cfg, params, "kappa", n,
+                               kcfg_kw={"schedule": sched})
+        r["schedule"] = sched
+        rows.append(r)
+    return rows
+
+
+def emit_csv(rows):
+    return [f"schedule_ablation/{r['schedule']}_N{r['n']},0,"
+            f"acc={r['accuracy']:.3f};total_toks={r['total_tokens']:.1f};"
+            f"peak_mb={r['peak_memory_mb']:.3f}" for r in rows]

@@ -1,0 +1,24 @@
+"""Paper Fig. 3: total-token reduction ratio of KAPPA vs BoN per N."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(cfg, params):
+    rows = []
+    for n in common.NS:
+        bon = common.eval_method(cfg, params, "bon", n)
+        kap = common.eval_method(cfg, params, "kappa", n)
+        rows.append({
+            "n": n,
+            "bon_tokens": bon["total_tokens"],
+            "kappa_tokens": kap["total_tokens"],
+            "reduction": 1.0 - kap["total_tokens"] / bon["total_tokens"],
+        })
+    return rows
+
+
+def emit_csv(rows):
+    return [f"token_ratio/N{r['n']},0,"
+            f"reduction={r['reduction']:.3f};bon={r['bon_tokens']:.1f};"
+            f"kappa={r['kappa_tokens']:.1f}" for r in rows]

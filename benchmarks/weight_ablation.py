@@ -1,0 +1,31 @@
+"""Signal-weight ablation (paper §4.1 hyperparameter discussion):
+the paper's (0.7, 0.2, 0.1) vs KL-only, confidence-only, entropy-only
+and uniform mixes."""
+from __future__ import annotations
+
+from benchmarks import common
+
+MIXES = {
+    "paper_0.7_0.2_0.1": (0.7, 0.2, 0.1),
+    "kl_only": (1.0, 0.0, 0.0),
+    "conf_only": (0.0, 1.0, 0.0),
+    "ent_only": (0.0, 0.0, 1.0),
+    "uniform": (1 / 3, 1 / 3, 1 / 3),
+}
+
+
+def run(cfg, params):
+    rows = []
+    n = common.NS[0]
+    for name, (wk, wc, wh) in MIXES.items():
+        r = common.eval_method(cfg, params, "kappa", n,
+                               kcfg_kw={"w_kl": wk, "w_conf": wc, "w_ent": wh})
+        r["mix"] = name
+        rows.append(r)
+    return rows
+
+
+def emit_csv(rows):
+    return [f"weight_ablation/{r['mix']},0,"
+            f"acc={r['accuracy']:.3f};total_toks={r['total_tokens']:.1f}"
+            for r in rows]

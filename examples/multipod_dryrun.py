@@ -1,0 +1,21 @@
+"""Multi-pod dry-run example: lower + compile one (arch × shape) on the
+512-chip mesh and print its roofline terms. No device allocation — the
+whole thing runs from ShapeDtypeStructs on a laptop.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import sys
+
+from repro.launch.dryrun import run_one  # noqa: E402  (sets XLA_FLAGS first)
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "rwkv6-3b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+
+rec = run_one(arch, shape, multi_pod=True)
+r = rec["roofline"]
+print(f"\nmesh 2x16x16 (512 chips), {arch} × {shape}")
+print(f"  compute    {r['compute_s']*1e3:9.3f} ms")
+print(f"  memory     {r['memory_s']*1e3:9.3f} ms   (HLO-raw {r['memory_hlo_s']*1e3:.3f} ms)")
+print(f"  collective {r['collective_s']*1e3:9.3f} ms")
+print(f"  dominant: {r['dominant']}   useful-flops ratio: {r['useful_ratio']:.2f}")
+print(f"  memory_analysis: {rec['memory']}")

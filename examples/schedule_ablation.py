@@ -1,0 +1,18 @@
+"""Pruning-schedule ablation (paper §4.2 discussion): linear (the paper's
+schedule) vs cosine (its suggested gentler variant) vs step.
+
+  PYTHONPATH=src python examples/schedule_ablation.py
+"""
+from repro.launch.serve import serve_eval
+from repro.launch.train import train_loop
+
+cfg, params = train_loop("deepseek-r1-distill-qwen-1.5b", steps=800,
+                         batch=64, d_model=256, log_every=200)
+
+print(f"\n{'schedule':10s} {'acc':>6s} {'total_toks':>10s} {'peak_MB':>8s}")
+for sched in ["linear", "cosine", "step"]:
+    r = serve_eval("deepseek-r1-distill-qwen-1.5b", "kappa", n=10,
+                   problems=25, params=params, cfg=cfg,
+                   kcfg_kw={"schedule": sched}, verbose=False)
+    print(f"{sched:10s} {r['accuracy']:6.3f} {r['total_tokens']:10.1f} "
+          f"{r['peak_memory_mb']:8.3f}")

@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md §Paper-claims tables from bench_output.txt CSV."""
+import re
+import sys
+
+
+def parse(path="bench_output.txt"):
+    rows = {}
+    for line in open(path):
+        line = line.strip()
+        if "," not in line or line.startswith(("name,", "#", "step")):
+            continue
+        name, us, derived = line.split(",", 2)
+        kv = dict(p.split("=", 1) for p in derived.split(";") if "=" in p)
+        rows[name] = kv
+    return rows
+
+
+def main(path="bench_output.txt"):
+    rows = parse(path)
+    out = []
+    out.append("### Appendix-A-style table (toy scale, N per column)\n")
+    out.append("| method | N | accuracy | final-branch toks | total toks | peak KV (MB) |")
+    out.append("|---|---|---|---|---|---|")
+    for key, kv in rows.items():
+        if not key.startswith("kappa_table/"):
+            continue
+        m = re.match(r"kappa_table/(\w+?)_N(\d+)", key)
+        out.append(f"| {m.group(1)} | {m.group(2)} | {kv['acc']} | "
+                   f"{kv['final_toks']} | {kv['total_toks']} | {kv['peak_mb']} |")
+
+    out.append("\n### Fig. 2/3 analogues — reduction vs BoN\n")
+    out.append("| N | token reduction | memory reduction |")
+    out.append("|---|---|---|")
+    ns = sorted({int(k.split("N")[-1]) for k in rows if k.startswith("token_ratio/")})
+    for n in ns:
+        t = rows.get(f"token_ratio/N{n}", {})
+        m = rows.get(f"memory_ratio/N{n}", {})
+        out.append(f"| {n} | {float(t.get('reduction', 0)):.1%} | "
+                   f"{float(m.get('reduction', 0)):.1%} |")
+
+    for tag, title in [("schedule_ablation", "Pruning-schedule ablation (§4.2)"),
+                       ("weight_ablation", "Signal-weight ablation (§4.1)"),
+                       ("horizon_ablation", "Adaptive-horizon ablation (paper §5 future work)")]:
+        sub = {k: v for k, v in rows.items() if k.startswith(tag + "/")}
+        if not sub:
+            continue
+        out.append(f"\n### {title}\n")
+        out.append("| variant | accuracy | total toks |")
+        out.append("|---|---|---|")
+        for k, v in sub.items():
+            out.append(f"| {k.split('/', 1)[1]} | {v.get('acc', '—')} | "
+                       f"{v.get('total_toks', '—')} |")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

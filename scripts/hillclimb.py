@@ -1,0 +1,70 @@
+"""§Perf hillclimb runner: re-lowers a (arch, shape) pair with an
+optimization variant and prints before/after roofline terms.
+
+  PYTHONPATH=src python scripts/hillclimb.py qwen3-moe-30b-a3b train_4k moe_ep
+  PYTHONPATH=src python scripts/hillclimb.py granite-3-8b decode_32k int8_kv
+  PYTHONPATH=src python scripts/hillclimb.py gemma3-4b prefill_32k seq_parallel
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+
+import dataclasses
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch import dryrun
+from repro.launch.mesh import data_axes, make_production_mesh
+
+VARIANTS = {
+    "moe_ep": dict(moe_impl="expert_parallel"),
+    "moe_ep+seq_parallel": dict(moe_impl="expert_parallel", seq_parallel=True),
+    "int8_kv": dict(kv_cache_dtype="int8"),
+    "seq_parallel": dict(seq_parallel=True),
+    "int8_kv+seq_parallel": dict(kv_cache_dtype="int8", seq_parallel=True),
+    "int8_kv+vocab_pad": dict(kv_cache_dtype="int8", _vocab_pad=16),
+    "vocab_pad": dict(_vocab_pad=16),
+    "baseline": {},
+}
+
+
+def main():
+    arch, shape, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    multi_pod = len(sys.argv) > 4 and sys.argv[4] == "--multi-pod"
+    overrides = dict(VARIANTS[variant])
+    vocab_pad = overrides.pop("_vocab_pad", 0)
+    cfg = dataclasses.replace(get_config(arch), **overrides)
+    if vocab_pad:
+        v = -(-cfg.vocab_size // vocab_pad) * vocab_pad
+        cfg = dataclasses.replace(cfg, vocab_size=v)
+
+    if cfg.seq_parallel:
+        from repro.models import attention, transformer
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        transformer.set_sequence_parallel_axes(data_axes(mesh))
+        attention.set_halo_mesh(mesh)
+
+    rec = dryrun.run_one(arch, shape, multi_pod=multi_pod,
+                         cfg_override=cfg, verbose=True)
+    tag = f"experiments/perf/{arch}_{shape}_{variant}.json"
+    os.makedirs(os.path.dirname(tag), exist_ok=True)
+    with open(tag, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+    base_path = f"experiments/dryrun/{arch}_{shape}_{rec['mesh']}.json"
+    if os.path.exists(base_path) and variant != "baseline":
+        base = json.load(open(base_path))["roofline"]
+        new = rec["roofline"]
+        print(f"\n=== {arch} × {shape} : baseline → {variant}")
+        for term in ["compute_s", "memory_s", "collective_s"]:
+            b, n = base[term], new[term]
+            delta = (n - b) / b * 100 if b else float("nan")
+            print(f"  {term:13s} {b:.3e} → {n:.3e}  ({delta:+.1f}%)")
+        print(f"  dominant      {base['dominant']} → {new['dominant']}")
+        print(f"  coll_by_kind  {base['coll_by_kind']}")
+        print(f"            →   {new['coll_by_kind']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main(out_dir="experiments/dryrun", mesh="16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*_{mesh}.json"))):
+        rec = json.load(open(path))
+        r = rec["roofline"]
+        rows.append((rec["arch"], rec["shape"], r))
+    rows.sort(key=lambda t: (t[0], ORDER.index(t[1])))
+    print(f"| arch | shape | compute | memory | collective | dominant | "
+          f"MODEL_FLOPS | useful | compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, r in rows:
+        rec = json.load(open(os.path.join(out_dir, f"{arch}_{shape}_{mesh}.json")))
+        print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+              f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+              f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+              f"{r['useful_ratio']:.2f} | {rec['compile_s']:.0f}s |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

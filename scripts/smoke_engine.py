@@ -1,0 +1,52 @@
+"""Dev smoke: train a tiny model on the arithmetic task, run all four
+generation strategies, print accuracy/token/memory comparison."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import KappaConfig
+from repro.data import tasks
+from repro.data import tokenizer as tok
+from repro.serving import engine
+from repro.training.train import init_train_state, train_step
+
+cfg = get_config("deepseek-r1-distill-qwen-1.5b").reduced(
+    num_layers=2, d_model=256, vocab_size=tok.VOCAB_SIZE)
+
+rng = jax.random.PRNGKey(0)
+state = init_train_state(rng, cfg)
+
+t0 = time.time()
+train = tasks.make_dataset(0, 16384, min_steps=2, max_steps=5, num_ops=2, max_operand=10)
+B, L = 64, 32
+for step in range(1200):
+    batch = [train[(step * B + i) % len(train)] for i in range(B)]
+    toks, mask = tasks.pack_batch(batch, L)
+    state, metrics = train_step(state, cfg, jnp.asarray(toks), jnp.asarray(mask),
+                                jnp.int32(step), None, total=1200)
+    if step % 200 == 0 or step == 1199:
+        print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+              f"lr {float(metrics['lr']):.2e}  ({time.time()-t0:.0f}s)")
+
+params = state.params
+test = tasks.make_dataset(999, 40, min_steps=2, max_steps=5, num_ops=2, max_operand=10)
+kcfg = KappaConfig(num_branches=5, max_new_tokens=48, max_cutoff=6, horizon=8,
+                   window=8, mom_buckets=4)
+
+for name, fn in [("greedy", engine.generate_greedy), ("bon", engine.generate_bon),
+                 ("stbon", engine.generate_stbon), ("kappa", engine.generate_kappa)]:
+    acc = toks_l = toks_c = peak = 0
+    t0 = time.time()
+    for i, prob in enumerate(test):
+        r = fn(params, cfg, kcfg, np.array(prob.prompt), jax.random.PRNGKey(i),
+               eos_id=tok.EOS, bos_id=tok.BOS)
+        acc += tasks.check_answer(r.tokens, prob)
+        toks_l += r.logical_tokens
+        toks_c += r.compute_tokens
+        peak = max(peak, r.peak_cache_bytes)
+    print(f"{name:7s} acc {acc/len(test):.3f}  logical_toks {toks_l/len(test):8.1f}  "
+          f"compute_toks {toks_c/len(test):8.1f}  peak_cache {peak/1e6:6.2f}MB  "
+          f"({time.time()-t0:.0f}s)")

@@ -1,0 +1,79 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full-size assigned config;
+``get_config(name).reduced()`` the CPU smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    TPU_HBM_BW,
+    TPU_ICI_BW,
+    TPU_PEAK_FLOPS,
+    InputShape,
+    KappaConfig,
+    MeshConfig,
+    ModelConfig,
+)
+
+# arch id -> module name
+_REGISTRY: Dict[str, str] = {
+    # the 10 assigned architectures
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen1.5-4b": "qwen15_4b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "internvl2-76b": "internvl2_76b",
+    "starcoder2-3b": "starcoder2_3b",
+    "whisper-small": "whisper_small",
+    "granite-3-8b": "granite_3_8b",
+    "rwkv6-3b": "rwkv6_3b",
+    # the paper's own evaluation models
+    "deepseek-r1-distill-qwen-1.5b": "deepseek_r1_distill_qwen_15b",
+    "qwen2.5-7b-instruct": "qwen25_7b_instruct",
+}
+
+ASSIGNED_ARCHS: List[str] = list(_REGISTRY)[:10]
+PAPER_ARCHS: List[str] = list(_REGISTRY)[10:]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[name]}")
+    return mod.config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in _REGISTRY}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    """Which of the 4 assigned input shapes apply to this arch.
+
+    long_500k needs sub-quadratic attention (SSM / hybrid / all-local /
+    local-global mixes where the unbounded-cache layers still shard); we
+    run it for archs whose layer pattern contains any bounded-memory
+    block type AND skip pure-full-attention stacks (noted in DESIGN.md).
+    Encoder-decoder archs keep decode_32k (decoder KV) but skip long_500k.
+    """
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    pat = set(cfg.block_types())
+    sub_quadratic_ok = pat <= {"rwkv6", "recurrent", "local"} or (
+        "local" in pat and "global" in pat and not cfg.is_encoder_decoder
+    )
+    if sub_quadratic_ok and not cfg.is_encoder_decoder:
+        shapes.append("long_500k")
+    return shapes
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "KappaConfig", "MeshConfig",
+    "INPUT_SHAPES", "ASSIGNED_ARCHS", "PAPER_ARCHS",
+    "get_config", "all_configs", "applicable_shapes",
+    "TPU_PEAK_FLOPS", "TPU_HBM_BW", "TPU_ICI_BW",
+]

@@ -1,0 +1,24 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144, 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt family]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        num_layers=34,
+        d_model=2560,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=10_240,
+        vocab_size=262_144,
+        # gemma3: 5 sliding-window layers per 1 global layer
+        layer_pattern=("local", "local", "local", "local", "local", "global"),
+        window_size=1024,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        source="hf:google/gemma-3-1b-pt",
+    )

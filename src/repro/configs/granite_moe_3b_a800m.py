@@ -1,0 +1,24 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) d_ff=512/expert
+vocab=49155, MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base family / granite-3.0-3b-a800m]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        num_layers=32,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=8,
+        d_ff=512,  # per-expert FFN width
+        vocab_size=49_155,
+        num_experts=40,
+        experts_per_tok=8,
+        layer_pattern=("global",),
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    )

@@ -1,0 +1,24 @@
+"""internvl2-76b [vlm] — language decoder: 80L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256 (Llama-3-70B backbone). InternViT vision encoder is a
+STUB frontend providing precomputed patch embeddings.  [arXiv:2404.16821]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=28_672,
+        vocab_size=128_256,
+        layer_pattern=("global",),
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+        frontend="vision",
+        frontend_tokens=256,  # patch embeddings per image from the stub projector
+        source="arXiv:2404.16821",
+    )

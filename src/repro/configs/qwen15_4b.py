@@ -1,0 +1,22 @@
+"""qwen1.5-4b [dense] — 40L d_model=2560 20H (GQA kv=20) d_ff=6912
+vocab=151936, QKV bias.  [hf:Qwen/Qwen1.5-0.5B family]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b",
+        family="dense",
+        num_layers=40,
+        d_model=2560,
+        num_heads=20,
+        num_kv_heads=20,
+        d_ff=6912,
+        vocab_size=151_936,
+        qkv_bias=True,
+        layer_pattern=("global",),
+        rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        source="hf:Qwen/Qwen1.5-0.5B",
+    )

@@ -1,0 +1,23 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768/expert
+vocab=151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=4,
+        d_ff=768,  # per-expert (moe_intermediate_size)
+        vocab_size=151_936,
+        num_experts=128,
+        experts_per_tok=8,
+        layer_pattern=("global",),
+        rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        source="hf:Qwen/Qwen3-30B-A3B",
+    )

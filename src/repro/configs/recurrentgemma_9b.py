@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000, Griffin: RG-LRU recurrent blocks + local attention, pattern 2
+recurrent : 1 local-attention.  [arXiv:2402.19427]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        num_layers=38,
+        d_model=4096,
+        num_heads=16,
+        num_kv_heads=1,
+        d_ff=12_288,
+        vocab_size=256_000,
+        layer_pattern=("recurrent", "recurrent", "local"),
+        window_size=2048,
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+        source="arXiv:2402.19427",
+    )

@@ -1,0 +1,22 @@
+"""rwkv6-3b [ssm] — "Finch": 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536, data-dependent decay time-mix.  [arXiv:2404.05892]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-3b",
+        family="ssm",
+        num_layers=32,
+        d_model=2560,
+        num_heads=40,       # RWKV6 head_size=64 → 2560/64 = 40 heads
+        num_kv_heads=40,
+        head_dim=64,
+        d_ff=8960,
+        vocab_size=65_536,
+        layer_pattern=("rwkv6",),
+        use_rope=False,
+        tie_embeddings=False,
+        source="arXiv:2404.05892",
+    )

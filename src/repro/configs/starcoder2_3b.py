@@ -1,0 +1,26 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152, GQA + RoPE, native 4k sliding window.  [arXiv:2402.19173]
+
+StarCoder2 uses sliding-window attention (window 4096) — we model it as
+all-local, which also qualifies it for the long_500k decode shape.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-3b",
+        family="dense",
+        num_layers=30,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=2,
+        d_ff=12_288,
+        vocab_size=49_152,
+        qkv_bias=True,
+        layer_pattern=("local",),
+        window_size=4096,
+        rope_theta=100_000.0,
+        tie_embeddings=True,
+        source="arXiv:2402.19173",
+    )

@@ -1,0 +1,27 @@
+"""whisper-small [audio] — enc-dec, 12L(+12L enc) d_model=768 12H (kv=12)
+d_ff=3072 vocab=51865, conv/mel frontend STUBBED (precomputed frame
+embeddings).  [arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="audio",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51_865,
+        layer_pattern=("global",),
+        use_rope=False,  # whisper uses learned/sinusoidal positions
+        is_encoder_decoder=True,
+        encoder_layers=12,
+        encoder_seq_len=1500,
+        frontend="audio",
+        frontend_tokens=1500,
+        tie_embeddings=True,
+        source="arXiv:2212.04356",
+    )

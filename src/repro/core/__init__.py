@@ -1,0 +1,12 @@
+from repro.core.kappa import (
+    KappaState,
+    compact_state,
+    init_state,
+    kappa_step,
+    num_alive,
+    survivor_index,
+)
+from repro.core.signals import compute_signals, reference_log_q
+
+__all__ = ["KappaState", "init_state", "kappa_step", "survivor_index",
+           "num_alive", "compact_state", "compute_signals", "reference_log_q"]

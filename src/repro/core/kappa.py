@@ -1,0 +1,199 @@
+"""KAPPA controller — jittable per-step state update + prune decision.
+
+This is the paper's Algorithm 2 as a fixed-shape JAX state machine over N
+branches. The serving engine (repro.serving.engine) drives the model,
+feeds per-branch next-token logits in, and applies the returned alive
+mask (with bucketed compaction — see DESIGN.md §2).
+
+Phases are encoded in the state rather than in Python control flow so the
+whole decode step jits:
+  draft   : t < cutoff         — no scoring, all branches alive
+  gating  : cutoff ≤ t < cutoff+τ — score + prune on the schedule
+  continue: one survivor decodes to EOS
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import KappaConfig
+from repro.core import robust, schedule, scoring, signals
+
+
+class KappaState(NamedTuple):
+    alive: jnp.ndarray        # (N,) bool
+    prev_kl: jnp.ndarray      # (N,) fp32 — D_{t-1} (D_{c-1} ≡ 0)
+    di_buf: jnp.ndarray       # (N, w) fp32 ring buffer of ΔI
+    di_count: jnp.ndarray     # scalar int32 — valid entries in di_buf
+    ema_raw: jnp.ndarray      # (N,) fp32 uncorrected EMA
+    ema_steps: jnp.ndarray    # scalar int32 — EMA updates so far
+    traj_num: jnp.ndarray     # (N,) fp32
+    traj_den: jnp.ndarray     # scalar fp32
+    traj: jnp.ndarray         # (N,) fp32 — current trajectory score S_t
+    step: jnp.ndarray         # scalar int32 — decode steps taken
+    cutoff: jnp.ndarray       # scalar int32 — c (set when draft ends)
+    in_gating: jnp.ndarray    # scalar bool
+    diverged: jnp.ndarray     # (N, N) bool — pairwise prefix divergence
+    horizon_dyn: jnp.ndarray  # scalar int32 — effective τ (adaptive-horizon)
+
+
+def init_state(cfg: KappaConfig) -> KappaState:
+    n, w = cfg.num_branches, cfg.window
+    eye = jnp.eye(n, dtype=bool)
+    return KappaState(
+        alive=jnp.ones((n,), bool),
+        prev_kl=jnp.zeros((n,), jnp.float32),
+        di_buf=jnp.zeros((n, w), jnp.float32),
+        di_count=jnp.int32(0),
+        ema_raw=jnp.zeros((n,), jnp.float32),
+        ema_steps=jnp.int32(0),
+        traj_num=jnp.zeros((n,), jnp.float32),
+        traj_den=jnp.float32(0.0),
+        traj=jnp.zeros((n,), jnp.float32),
+        step=jnp.int32(0),
+        cutoff=jnp.int32(cfg.max_cutoff if cfg.adaptive_cutoff else cfg.draft_cutoff),
+        in_gating=jnp.bool_(False),
+        diverged=eye,  # diagonal "True" so all-pairwise checks read clean
+        horizon_dyn=jnp.int32(cfg.horizon),
+    )
+
+
+def _update_divergence(state: KappaState, tokens) -> KappaState:
+    """Track earliest pairwise inconsistency (ST-BoN's draft-cutoff rule).
+    tokens: (N,) int32 sampled this step."""
+    neq = tokens[:, None] != tokens[None, :]
+    return state._replace(diverged=state.diverged | neq)
+
+
+def _all_pairwise_diverged(state: KappaState) -> jnp.ndarray:
+    return jnp.all(state.diverged)
+
+
+def _score_update(state: KappaState, sigs, cfg: KappaConfig
+                  ) -> Tuple[KappaState, jnp.ndarray]:
+    """One gating-phase scoring step (Alg. 2 lines 13–21).
+    Returns (state, trajectory scores)."""
+    kl, conf, ent = sigs
+    first = state.ema_steps == 0
+    d_prev = jnp.where(first, jnp.zeros_like(kl), state.prev_kl)  # D_{c-1} ≡ 0
+    di = kl - d_prev
+
+    slot = jnp.mod(state.di_count, cfg.window)
+    di_buf = jax.lax.dynamic_update_index_in_dim(state.di_buf, di, slot, axis=1)
+    di_count = jnp.minimum(state.di_count + 1, cfg.window)
+    di_hat = robust.median_of_means(di_buf, di_count, cfg.mom_buckets)
+
+    ema_raw = robust.ema_update(state.ema_raw, di_hat, cfg.ema_rate)
+    ema_steps = state.ema_steps + 1
+    ema_hat = robust.ema_debias(ema_raw, ema_steps, cfg.ema_rate)
+
+    z_ema = scoring.masked_zscore(ema_hat, state.alive, cfg.zscore_clip)
+    z_conf = scoring.masked_zscore(conf, state.alive, cfg.zscore_clip)
+    z_ent = scoring.masked_zscore(ent, state.alive, cfg.zscore_clip)
+    s = scoring.aggregate(z_ema, z_conf, z_ent, cfg.w_kl, cfg.w_conf, cfg.w_ent)
+
+    num, den, traj = scoring.trajectory_update(
+        state.traj_num, state.traj_den, s, state.step)
+
+    return state._replace(
+        prev_kl=kl, di_buf=di_buf, di_count=di_count,
+        ema_raw=ema_raw, ema_steps=ema_steps,
+        traj_num=num, traj_den=den, traj=traj), traj
+
+
+def _prune(alive, traj, r_target):
+    """Keep the r_target highest-trajectory alive branches (Alg. 2 l. 25).
+    Never prunes below 1; dead branches stay dead."""
+    n = alive.shape[0]
+    neg = jnp.float32(-3.4e38)
+    masked = jnp.where(alive, traj, neg)
+    order = jnp.argsort(-masked)                       # best first
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    keep = (rank < r_target) & alive
+    # safety: if r_target exceeds the alive count nothing changes
+    return keep
+
+
+def kappa_step(state: KappaState, logits, tokens, log_q, cfg: KappaConfig
+               ) -> KappaState:
+    """Full per-decode-step controller update. Jittable; cfg static.
+
+    logits: (N, V) next-token logits of every branch (dead branches may
+    contain garbage — they are masked). tokens: (N,) the tokens just
+    sampled. log_q: (V,) unconditional reference log-probs.
+    """
+    state = _update_divergence(state, tokens)
+    sigs = signals.compute_signals(logits, log_q)
+
+    # --- draft→gating transition (adaptive cutoff à la ST-BoN)
+    if cfg.adaptive_cutoff:
+        hit = _all_pairwise_diverged(state) | (state.step >= cfg.max_cutoff)
+    else:
+        hit = state.step >= cfg.draft_cutoff
+    enter = (~state.in_gating) & hit
+    cutoff = jnp.where(enter, state.step, state.cutoff)
+    in_gating = state.in_gating | hit
+
+    # --- adaptive horizon (paper §5 future work): at gating entry, scale
+    # τ by the alive branches' mean normalized entropy — flat next-token
+    # distributions (hard problems) earn a longer gating phase
+    horizon_dyn = state.horizon_dyn
+    if cfg.adaptive_horizon:
+        _, _, ent = sigs
+        aw = state.alive.astype(jnp.float32)
+        h_mean = jnp.sum(ent * aw) / jnp.maximum(jnp.sum(aw), 1.0)
+        h_norm = jnp.clip(h_mean / jnp.log(jnp.float32(logits.shape[-1])), 0.0, 1.0)
+        tau = jnp.round(cfg.horizon * (1.0 + cfg.horizon_beta * (2.0 * h_norm - 1.0)))
+        tau = jnp.clip(tau, max(2, cfg.horizon // 2), cfg.horizon * 2).astype(jnp.int32)
+        horizon_dyn = jnp.where(enter, tau, state.horizon_dyn)
+    state = state._replace(cutoff=cutoff, in_gating=in_gating,
+                           horizon_dyn=horizon_dyn)
+
+    # --- gating-phase scoring + pruning (masked when not in gating)
+    scored, traj = _score_update(state, sigs, cfg)
+    gate_rel = jnp.clip(state.step - cutoff, 0, horizon_dyn)
+    r_target = schedule.survivors(cfg.schedule, cfg.num_branches,
+                                  gate_rel, horizon_dyn)
+    active_gate = in_gating & (gate_rel < horizon_dyn) & (jnp.sum(state.alive) > 1)
+    new_alive = _prune(state.alive, traj, r_target)
+
+    out = jax.tree.map(
+        lambda a, b: jnp.where(in_gating, a, b), scored, state)
+    alive = jnp.where(active_gate, new_alive, state.alive)
+    return out._replace(alive=alive, step=state.step + 1,
+                        cutoff=cutoff, in_gating=in_gating,
+                        diverged=state.diverged, horizon_dyn=horizon_dyn)
+
+
+def survivor_index(state: KappaState) -> jnp.ndarray:
+    """Unique survivor (ties: larger trajectory score, then lower index)."""
+    masked = jnp.where(state.alive, state.traj, -3.4e38)
+    return jnp.argmax(masked)
+
+
+def num_alive(state: KappaState) -> jnp.ndarray:
+    return jnp.sum(state.alive.astype(jnp.int32))
+
+
+def compact_state(state: KappaState, idx) -> KappaState:
+    """Gather branch rows for bucketed compaction. idx: (M,) int32 of
+    surviving branch indices (M ≤ N)."""
+    m = idx.shape[0]
+    return KappaState(
+        alive=state.alive[idx],
+        prev_kl=state.prev_kl[idx],
+        di_buf=state.di_buf[idx],
+        di_count=state.di_count,
+        ema_raw=state.ema_raw[idx],
+        ema_steps=state.ema_steps,
+        traj_num=state.traj_num[idx],
+        traj_den=state.traj_den,
+        traj=state.traj[idx],
+        step=state.step,
+        cutoff=state.cutoff,
+        in_gating=state.in_gating,
+        diverged=state.diverged[idx][:, idx],
+        horizon_dyn=state.horizon_dyn,
+    )

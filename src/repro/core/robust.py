@@ -1,0 +1,45 @@
+"""Robustification of the ΔI signal (paper Alg. 2 lines 15–17):
+median-of-means over a ring-buffered window, then bias-corrected EMA.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def median_of_means(window, count, m: int):
+    """MoM over the last ``count`` valid entries of ``window``.
+
+    window: (..., w) — ring-ordered values, only the first ``count``
+    (chronologically) are valid; invalid entries may be anything.
+    count: scalar int. m: static bucket count.
+
+    Splits the w slots into m equal buckets; bucket means are computed
+    over valid entries only (empty buckets are excluded from the median
+    by replicating the global mean of valid entries).
+    """
+    w = window.shape[-1]
+    assert w % m == 0, "window must divide evenly into MoM buckets"
+    per = w // m
+    idx = jnp.arange(w)
+    valid = (idx < count).astype(jnp.float32)            # (w,)
+    vw = window * valid
+    bucket_sum = vw.reshape(*window.shape[:-1], m, per).sum(-1)
+    bucket_n = valid.reshape(m, per).sum(-1)             # (m,)
+    total_mean = vw.sum(-1) / jnp.maximum(valid.sum(), 1.0)
+    bucket_mean = jnp.where(bucket_n > 0,
+                            bucket_sum / jnp.maximum(bucket_n, 1.0),
+                            total_mean[..., None])
+    return jnp.median(bucket_mean, axis=-1)
+
+
+def ema_update(ema_raw, x, alpha: float):
+    """One uncorrected EMA step: m_t = α·x + (1−α)·m_{t−1}."""
+    return alpha * x + (1.0 - alpha) * ema_raw
+
+
+def ema_debias(ema_raw, step, alpha: float):
+    """Bias-corrected read: m̂_t = m_t / (1 − (1−α)^t), t ≥ 1 (Adam-style;
+    the paper's Alg. 2 line 17 written as a recursion on the corrected
+    value is numerically equivalent at read time)."""
+    corr = 1.0 - (1.0 - alpha) ** jnp.maximum(step, 1)
+    return ema_raw / corr

@@ -1,0 +1,43 @@
+"""Pruning schedules: target survivor count R_t over the gating horizon.
+
+Paper (Alg. 2 line 24): linear — R_t = N − ⌊(t−c+1)·N/τ⌋, clipped to ≥1,
+reaching exactly 1 at the end of the horizon. The cosine schedule is the
+paper's own suggested less-aggressive extension (§4.2 / §5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_survivors(n: int, step_in_horizon, horizon: int):
+    """step_in_horizon: 0-based (t − c). Returns R ∈ [1, N]."""
+    u = step_in_horizon + 1
+    r = n - (u * n) // horizon
+    return jnp.clip(r, 1, n)
+
+
+def cosine_survivors(n: int, step_in_horizon, horizon: int):
+    """Cosine: slow early pruning, steep at the end; R_τ = 1."""
+    u = (step_in_horizon + 1).astype(jnp.float32) / horizon
+    r = jnp.ceil(1.0 + (n - 1) * jnp.cos(jnp.pi / 2.0 * jnp.clip(u, 0.0, 1.0)))
+    return jnp.clip(r.astype(jnp.int32), 1, n)
+
+
+def step_survivors(n: int, step_in_horizon, horizon: int, n_stages: int = 4):
+    """Piecewise-constant halving schedule (beyond-paper ablation)."""
+    u = (step_in_horizon + 1).astype(jnp.float32) / horizon
+    stage = jnp.floor(u * n_stages)
+    r = jnp.floor(n * (0.5 ** stage))
+    last = (step_in_horizon + 1) >= horizon
+    r = jnp.where(last, 1, jnp.clip(r.astype(jnp.int32), 1, n))
+    return r
+
+
+def survivors(kind: str, n: int, step_in_horizon, horizon: int):
+    if kind == "linear":
+        return linear_survivors(n, step_in_horizon, horizon)
+    if kind == "cosine":
+        return cosine_survivors(n, step_in_horizon, horizon)
+    if kind == "step":
+        return step_survivors(n, step_in_horizon, horizon)
+    raise ValueError(f"unknown schedule {kind!r}")

@@ -1,0 +1,31 @@
+"""Cross-branch normalization and score aggregation (Alg. 2 lines 19–21)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def masked_zscore(x, alive, clip: float = 3.0):
+    """z-score x across *alive* branches only, clamp to ±clip.
+    x: (N,), alive: (N,) bool. Dead entries are returned as 0."""
+    aw = alive.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(aw), 1.0)
+    mu = jnp.sum(x * aw) / n
+    var = jnp.sum(jnp.square(x - mu) * aw) / n
+    z = (x - mu) / (jnp.sqrt(var) + EPS)
+    return jnp.clip(z, -clip, clip) * aw
+
+
+def aggregate(z_ema, z_conf, z_ent, w_kl: float, w_conf: float, w_ent: float):
+    """Instantaneous score s_t (Alg. 2 line 20)."""
+    return w_kl * z_ema + w_conf * z_conf + w_ent * z_ent
+
+
+def trajectory_update(num, den, s, t_abs):
+    """Running recency-weighted trajectory score S_t = Σ t′·s_{t′} / Σ t′
+    (Alg. 2 line 21, ω_{t′,t} ∝ t′). Returns (num, den, S)."""
+    w = jnp.maximum(t_abs.astype(jnp.float32), 1.0)
+    num = num + w * s
+    den = den + w
+    return num, den, num / jnp.maximum(den, EPS)

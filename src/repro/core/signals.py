@@ -1,0 +1,54 @@
+"""Latent informativeness signals (paper §3, Alg. 2 lines 13–18).
+
+All three signals come from the branch's own next-token distribution:
+  D_t  = D_KL(p_t ‖ q)      — divergence from the unconditional reference
+  C_t  = max_v p_t(v)       — confidence
+  H_t  = −Σ p log(p + ε)    — entropy
+
+``compute_signals`` is the single fusion point: the pure-jnp path below
+is the oracle; kernels/fused_score provides the Pallas TPU kernel that
+computes all three in one VMEM pass over the vocabulary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def log_softmax(logits):
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def reference_log_q(ref_logits):
+    """Unconditional reference distribution q from the BOS-only forward
+    pass (Alg. 2 line 9). ref_logits: (V,) or (1, V)."""
+    return log_softmax(ref_logits).reshape(-1)
+
+
+def kl_to_reference(log_p, log_q):
+    """D_KL(p ‖ q) = Σ p (log p − log q). log_p: (..., V); log_q: (V,)."""
+    p = jnp.exp(log_p)
+    return jnp.sum(p * (log_p - log_q), axis=-1)
+
+
+def confidence(log_p):
+    return jnp.exp(jnp.max(log_p, axis=-1))
+
+
+def entropy(log_p):
+    p = jnp.exp(log_p)
+    return -jnp.sum(p * jnp.log(p + EPS), axis=-1)
+
+
+def compute_signals(logits, log_q, *, use_pallas: bool = False):
+    """logits: (N, V) fp32/bf16; log_q: (V,) fp32.
+    Returns (kl, conf, ent), each (N,) fp32."""
+    if use_pallas:
+        from repro.kernels.fused_score.ops import fused_score
+        return fused_score(logits, log_q)
+    log_p = log_softmax(logits)
+    return (kl_to_reference(log_p, log_q),
+            confidence(log_p),
+            entropy(log_p))

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (the TPU target)
+  ops.py    — jit'd public wrapper (auto-selects interpret mode off-TPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""
+from __future__ import annotations
+
+import jax
+
+_FORCE_INTERPRET = None
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret=True everywhere except a real TPU backend."""
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return not on_tpu()

@@ -1,0 +1,116 @@
+"""Flash-decode GQA attention kernel (one new token vs a long KV cache).
+
+Why a kernel: decode attention is the memory-bound inner loop of the
+serving engine — every step streams the whole KV cache once. Flash-decode
+tiles the cache sequence into VMEM blocks and keeps online-softmax
+statistics per (batch, kv-head), so HBM traffic is exactly one read of
+K and V, no (S,) score materialization in HBM, and the G=H/KV query rows
+of a GQA group ride along in registers/VMEM (sublane dim) for free.
+
+Grid: (B, KV, S/TS) — S innermost (sequential). Scratch per (b, kv):
+  m (G,1), l (G,1), acc (G, hd). Output written on the last S tile.
+
+Masking (causal / sliding-window / ring-buffer slot semantics) is
+computed from the absolute position scalar, prefetched via
+PrefetchScalarGridSpec so block index maps could depend on it if needed.
+
+TS defaults to 512: K tile + V tile = 2·512·hd·2B ≈ 256 KiB (hd=128
+bf16) — comfortably inside VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0 ** 30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+            *, n_s_tiles: int, tile_s: int, window: int, ring: bool,
+            seq: int, scale: float):
+    si = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(si == 0)
+    def _init():
+        m_s[:] = jnp.full_like(m_s, NEG)
+        l_s[:] = jnp.zeros_like(l_s)
+        acc_s[:] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (TS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (TS, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, TS)
+
+    slots = si * tile_s + jax.lax.broadcasted_iota(jnp.int32, (1, tile_s), 1)
+    if ring:
+        kv_pos = pos - jnp.mod(pos - slots, seq)
+    else:
+        kv_pos = slots
+    valid = (kv_pos >= 0) & (kv_pos <= pos) & (slots < seq)  # last: seq padding
+    if window > 0:
+        valid &= (pos - kv_pos) < window
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_s[:]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    r = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                        # (G, TS)
+    l_s[:] = l_s[:] * r + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[:] = acc_s[:] * r + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_s[:] = m_new
+
+    @pl.when(si == n_s_tiles - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[:] / jnp.maximum(l_s[:], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "ring", "tile_s", "interpret"))
+def decode_attn_pallas(q, k, v, pos, *, window: int = 0, ring: bool = False,
+                       tile_s: int = 512, interpret: bool = True):
+    """q: (B, H, hd); k, v: (B, S, KV, hd); pos: scalar int32.
+    Returns (B, H, hd) fp32. See ref.py for slot semantics."""
+    B, S, KV, hd = k.shape
+    H = q.shape[1]
+    G = H // KV
+    ts = min(tile_s, S)
+    Sp = -(-S // ts) * ts
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        # padded slots: ring positions computed mod original seq — mask
+        # them via kv_pos > pos (slots >= S get kv_pos = slot > pos in
+        # non-ring; in ring mode pad is masked below via seq=S semantics)
+    n_s = Sp // ts
+    qr = q.reshape(B, KV, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, s, pos_ref: (b, kv, 0, 0)),
+            pl.BlockSpec((1, ts, 1, hd), lambda b, kv, s, pos_ref: (b, s, kv, 0)),
+            pl.BlockSpec((1, ts, 1, hd), lambda b, kv, s, pos_ref: (b, s, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kv, s, pos_ref: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, n_s_tiles=n_s, tile_s=ts, window=window,
+                             ring=ring, seq=S, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qr, k, v)
+    return out.reshape(B, H, hd)

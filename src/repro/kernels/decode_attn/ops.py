@@ -1,0 +1,12 @@
+"""Public wrapper for the flash-decode attention kernel."""
+from __future__ import annotations
+
+from repro.kernels import interpret_mode
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+
+
+def decode_attn(q, k, v, pos, *, window: int = 0, ring: bool = False,
+                tile_s: int = 512):
+    """Flash GQA decode: q (B,H,hd) vs cache (B,S,KV,hd). See kernel.py."""
+    return decode_attn_pallas(q, k, v, pos, window=window, ring=ring,
+                              tile_s=tile_s, interpret=interpret_mode())

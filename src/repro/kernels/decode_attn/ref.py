@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for GQA flash-decode with full / ring KV caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attn_ref(q, k, v, pos, *, window: int = 0, ring: bool = False):
+    """One-token GQA decode attention.
+
+    q: (B, H, hd) — query for the current token (already rope'd)
+    k, v: (B, S, KV, hd) — cache contents (slot s semantics below)
+    pos: scalar int — absolute position of the current token (its K/V is
+         already written into the cache)
+    window: sliding window size (0 = global)
+    ring: if True the cache is a ring buffer (slot s holds the largest
+          p ≤ pos with p ≡ s mod S), else slot s holds position s.
+
+    Returns (B, H, hd) fp32.
+    """
+    B, S, KV, hd = k.shape
+    H = q.shape[1]
+    G = H // KV
+
+    slots = jnp.arange(S)
+    if ring:
+        kv_pos = pos - jnp.mod(pos - slots, S)
+    else:
+        kv_pos = slots
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    if window > 0:
+        valid &= (pos - kv_pos) < window
+
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qr, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

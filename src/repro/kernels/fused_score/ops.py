@@ -1,0 +1,11 @@
+"""Public wrapper for the fused score kernel."""
+from __future__ import annotations
+
+from repro.kernels import interpret_mode
+from repro.kernels.fused_score.kernel import fused_score_pallas
+
+
+def fused_score(logits, log_q, *, tile_b: int = 8, tile_v: int = 2048):
+    """(kl, conf, ent) from one VMEM pass. See kernel.py."""
+    return fused_score_pallas(logits, log_q, tile_b=tile_b, tile_v=tile_v,
+                              interpret=interpret_mode())

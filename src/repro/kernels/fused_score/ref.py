@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused KAPPA score kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_score_ref(logits, log_q):
+    """logits: (B, V) any float dtype; log_q: (V,) fp32.
+    Returns (kl, conf, ent) each (B,) fp32 where p = softmax(logits):
+      kl   = Σ p (log p − log q)
+      conf = max p
+      ent  = −Σ p log p
+    """
+    log_p = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(log_p)
+    kl = jnp.sum(p * (log_p - log_q[None, :]), axis=-1)
+    conf = jnp.exp(jnp.max(log_p, axis=-1))
+    ent = -jnp.sum(p * log_p, axis=-1)
+    return kl, conf, ent

@@ -1,0 +1,35 @@
+"""Public wrapper for the chunked RWKV6 scan kernel.
+
+Handles T-padding to the chunk size and nonzero initial state: the kernel
+runs with S₀ = 0 and the (linear) S₀ contribution is added outside —
+  y_t += r_t · diag(e^{Lc_{t−1}}) S₀     (Lc from sequence start)
+  S_T += diag(e^{Lc_T}) S₀
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 32):
+    B, T, H, hd = r.shape
+    Tp = -(-T // chunk) * chunk
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)  # decay 1 → state untouched
+    y, s_fin = rwkv6_scan_pallas(r, k, v, w, u, None, chunk=chunk,
+                                 interpret=interpret_mode())
+    y = y[:, :T]
+
+    if s0 is not None:
+        lw = jnp.log(jnp.maximum(w[:, :T].astype(jnp.float32), 1e-38))
+        lc = jnp.cumsum(lw, axis=1)                    # (B,T,H,hd)
+        r_dec = r[:, :T].astype(jnp.float32) * jnp.exp(lc - lw)
+        y = y + jnp.einsum("bthi,bhij->bthj", r_dec, s0)
+        s_fin = s_fin + jnp.exp(lc[:, -1])[..., None] * s0
+    return y, s_fin

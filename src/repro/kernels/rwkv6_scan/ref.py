@@ -1,0 +1,28 @@
+"""Pure-jnp sequential oracle for the chunked RWKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Sequential WKV6 recurrence (the time-mix core).
+
+    r, k, v, w: (B, T, H, hd) fp32 — receptance, key, value, decay (w∈(0,1))
+    u: (H, hd) fp32 — per-key bonus for the current token
+    s0: (B, H, hd, hd) fp32 — initial state (key-dim × value-dim)
+
+    Returns (y (B,T,H,hd), s_final (B,H,hd,hd)):
+      y_t = r_t · (S_{t−1} + u∘k_t ⊗ v_t)
+      S_t = diag(w_t) S_{t−1} + k_t ⊗ v_t
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

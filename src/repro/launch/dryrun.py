@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")  # silence SPMD chatter
+
+"""Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture × input shape × mesh) — no real allocation, only
+ShapeDtypeStructs.
+
+  train_4k    → train_step   (grads + AdamW update)
+  prefill_32k → prefill      (prompt processing, cache fill)
+  decode_32k  → serve_step   (ONE token, 32k KV, KAPPA scoring+sampling)
+  long_500k   → serve_step   (ONE token, 512k cache, batch 1; sequence-
+                              sharded cache — sub-quadratic archs only)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape decode_32k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, applicable_shapes, get_config
+from repro.configs.base import KappaConfig, ModelConfig
+from repro.core import kappa as kappa_lib
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, from_compiled
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_struct(cfg: ModelConfig, batch: int):
+    if cfg.frontend is None:
+        return None
+    return _struct((batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, kcfg: KappaConfig):
+    """ShapeDtypeStruct stand-ins for every input of the lowered fn."""
+    from repro.models import init_cache, init_params
+    from repro.training.train import init_train_state
+
+    spec = INPUT_SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+
+    if spec.kind == "train":
+        state = jax.eval_shape(
+            functools.partial(init_train_state, cfg=cfg), jax.random.PRNGKey(0))
+        return {
+            "state": state,
+            "tokens": _struct((B, S), jnp.int32),
+            "loss_mask": _struct((B, S), jnp.float32),
+            "step": _struct((), jnp.int32),
+            "frontend": _frontend_struct(cfg, B),
+        }
+
+    params = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+
+    if spec.kind == "prefill":
+        # VLM prefix tokens extend the cached sequence (prompt + patches)
+        S_cache = S + (cfg.frontend_tokens
+                       if cfg.frontend and not cfg.is_encoder_decoder else 0)
+        cache = jax.eval_shape(functools.partial(init_cache, cfg, B, S_cache))
+        return {
+            "params": params,
+            "tokens": _struct((B, S), jnp.int32),
+            "cache": cache,
+            "frontend": _frontend_struct(cfg, B),
+        }
+
+    # decode: ONE new token with a seq_len KV cache
+    cache = jax.eval_shape(functools.partial(init_cache, cfg, B, S))
+    kstate = jax.eval_shape(
+        functools.partial(kappa_lib.init_state,
+                          KappaConfig(num_branches=B, window=kcfg.window)))
+    return {
+        "params": params,
+        "token": _struct((B,), jnp.int32),
+        "pos": _struct((), jnp.int32),
+        "cache": cache,
+        "kstate": kstate,
+        "log_q": _struct((cfg.vocab_size,), jnp.float32),
+        "rng": jax.eval_shape(lambda: jax.random.PRNGKey(0)),
+    }
+
+
+def _replicate_tree(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def lower_pair(cfg: ModelConfig, shape_name: str, mesh, kcfg: KappaConfig):
+    """Build the jit, lower and compile one (arch, shape, mesh) pair.
+    Returns (lowered, compiled)."""
+    from repro.models import prefill as model_prefill
+    from repro.serving.engine import serve_step
+    from repro.training.train import train_step_fn
+
+    spec = INPUT_SHAPES[shape_name]
+    ins = input_specs(cfg, shape_name, kcfg)
+    bspec = sh.batch_spec(mesh)
+
+    def _param_sh(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: NamedSharding(
+                mesh, sh.param_spec(sh._path_str(p), tuple(x.shape), mesh, cfg)),
+            tree)
+
+    if spec.kind == "train":
+        fn = train_step_fn(cfg)
+        in_sh = [_param_sh(ins["state"]), NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, bspec), sh.replicated(mesh)]
+        args = [ins["state"], ins["tokens"], ins["loss_mask"], ins["step"]]
+        if ins["frontend"] is not None:
+            in_sh.append(NamedSharding(mesh, sh.batch_spec(mesh, extra_dims=2)))
+            args.append(ins["frontend"])
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=tuple(in_sh)).lower(*args)
+
+    elif spec.kind == "prefill":
+        cache_sh = sh.cache_shardings(ins["cache"], mesh, cfg)
+
+        def pf(params, tokens, cache, frontend=None):
+            return model_prefill(params, cfg, tokens, cache, frontend)
+
+        in_sh = [_param_sh(ins["params"]), NamedSharding(mesh, bspec), cache_sh]
+        args = [ins["params"], ins["tokens"], ins["cache"]]
+        if ins["frontend"] is not None:
+            in_sh.append(NamedSharding(mesh, sh.batch_spec(mesh, extra_dims=2)))
+            args.append(ins["frontend"])
+        with mesh:
+            lowered = jax.jit(pf, in_shardings=tuple(in_sh)).lower(*args)
+
+    else:  # decode
+        seq_shard = spec.global_batch == 1  # long_500k: shard cache seq
+        param_sh = _param_sh(ins["params"])
+        cache_sh = sh.cache_shardings(ins["cache"], mesh, cfg,
+                                      seq_shard=seq_shard)
+        tok_sh = sh.replicated(mesh) if seq_shard else NamedSharding(mesh, P(("pod", "data") if "pod" in mesh.axis_names else ("data",)))
+        kcfg_b = KappaConfig(num_branches=spec.global_batch, window=kcfg.window)
+
+        def step(params, token, pos, cache, kstate, log_q, rng):
+            return serve_step(params, cfg, kcfg_b, token, pos, cache,
+                              kstate, log_q, rng)
+
+        in_sh = (param_sh, tok_sh, sh.replicated(mesh), cache_sh,
+                 _replicate_tree(ins["kstate"], mesh), sh.replicated(mesh),
+                 sh.replicated(mesh))
+        args = (ins["params"], ins["token"], ins["pos"], ins["cache"],
+                ins["kstate"], ins["log_q"], ins["rng"])
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _attn_flops_per_token(cfg: ModelConfig, kv_len_of) -> float:
+    """Attention/state flops per generated token (beyond the 2·N matmuls):
+    scores + probs·V = 4·hd·S_attended per head per layer."""
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    for bt in cfg.block_types():
+        if bt == "global":
+            total += 4.0 * cfg.num_heads * hd * kv_len_of(None)
+        elif bt == "local":
+            total += 4.0 * cfg.num_heads * hd * min(kv_len_of(None), cfg.window_size)
+        elif bt == "rwkv6":
+            # state read+update: ~6 flops per (hd_k × hd_v) cell per head
+            total += 6.0 * cfg.num_heads * hd * hd
+        elif bt == "recurrent":
+            total += 8.0 * cfg.d_model  # elementwise recurrence
+    return total
+
+
+def model_flops_estimate(cfg: ModelConfig, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS (the useful-compute floor):
+      matmuls — 6·N_active·D (train) / 2·N_active·D (forward)
+      + attention — 4·H·hd·S_kv per token per attn layer (·3 for train bwd)
+    """
+    spec = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "train":
+        # causal: average attended length S/2
+        attn = B * S * _attn_flops_per_token(cfg, lambda _: S / 2) * 3.0
+        return 6.0 * n_active * B * S + attn
+    if spec.kind == "prefill":
+        attn = B * S * _attn_flops_per_token(cfg, lambda _: S / 2)
+        return 2.0 * n_active * B * S + attn
+    # decode: one token per row, full cache attended
+    attn = B * _attn_flops_per_token(cfg, lambda _: S)
+    return 2.0 * n_active * B + attn
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str | None = None, verbose: bool = True,
+            unroll: bool = True, cfg_override: ModelConfig | None = None) -> dict:
+    import dataclasses
+    cfg = cfg_override or get_config(arch)
+    # unrolled layer stack → cost_analysis sees every layer (scan bodies
+    # are counted once by XLA); scan mode stays available for A/B checks
+    cfg = dataclasses.replace(cfg, unroll=unroll)
+    kcfg = KappaConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.moe_impl == "expert_parallel":
+        from repro.models import moe as moe_lib
+        moe_lib.set_mesh(mesh)
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered, compiled = lower_pair(cfg, shape_name, mesh, kcfg)
+    compile_s = time.time() - t0
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"error": str(e)[:200]}
+
+    roof = from_compiled(compiled, chips,
+                         model_flops_estimate(cfg, shape_name))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "compile_s": round(compile_s, 1),
+        "memory": mem, "roofline": roof.summary(),
+    }
+    if verbose:
+        r = roof
+        print(f"{arch:28s} {shape_name:12s} mesh={rec['mesh']:8s} "
+              f"compile={compile_s:6.1f}s flops={r.flops:.3e} "
+              f"bytes={r.hbm_bytes:.3e} coll={r.coll_bytes:.3e} "
+              f"dom={r.dominant:10s} useful={r.useful_flops_ratio:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}.json"
+        with open(os.path.join(out_dir, tag), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED_ARCHS
+
+    pairs = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            for s in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+                if s in applicable_shapes(cfg):
+                    pairs.append((arch, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, s in pairs:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        tag = os.path.join(args.out, f"{arch}_{s}_{mesh_tag}.json")
+        if args.skip_existing and os.path.exists(tag):
+            print(f"skip {arch} {s} (exists)")
+            continue
+        try:
+            run_one(arch, s, multi_pod=args.multi_pod, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, s, repr(e)[:300]))
+            print(f"FAIL {arch:28s} {s:12s}: {repr(e)[:300]}")
+            traceback.print_exc(limit=3)
+    if failures:
+        print(f"\n{len(failures)} failures")
+        sys.exit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — one TPU v5e pod of 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the "pod" axis is an
+outer data axis (only gradient all-reduce crosses it in train_step).
+
+Defined as functions (not module constants) so importing never touches
+jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh for CPU smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axis names that act as data parallelism (includes "pod")."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))

@@ -1,0 +1,103 @@
+"""Serving launcher: run Greedy / BoN / ST-BoN / KAPPA over synthetic
+task prompts with a trained (or fresh) model and print the paper's
+metric columns.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
+      --method kappa --n 5 --problems 20 [--ckpt ckpt.msgpack]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import KappaConfig
+from repro.data import tasks
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.models.frontends import stub_frontend
+from repro.serving import engine
+from repro.training import checkpoint
+
+METHODS = {
+    "greedy": engine.generate_greedy,
+    "bon": engine.generate_bon,
+    "stbon": engine.generate_stbon,
+    "kappa": engine.generate_kappa,
+}
+
+
+def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
+               ckpt: str | None = None, d_model: int = 256,
+               num_layers: int = 2, seed: int = 999, max_new: int = 48,
+               kcfg_kw: dict | None = None, dataset_kw: dict | None = None,
+               params=None, cfg=None, verbose: bool = True) -> dict:
+    if cfg is None:
+        cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
+                                       vocab_size=tok.VOCAB_SIZE)
+    if params is None:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        if ckpt:
+            params = checkpoint.restore(ckpt, params)
+
+    kw = dict(num_branches=n, max_new_tokens=max_new, max_cutoff=6,
+              horizon=8, window=8, mom_buckets=4)
+    kw.update(kcfg_kw or {})
+    kcfg = KappaConfig(**kw)
+    dkw = dict(min_steps=2, max_steps=5, num_ops=2, max_operand=10)
+    dkw.update(dataset_kw or {})
+    test = tasks.make_dataset(seed, problems, **dkw)
+
+    fe = stub_frontend(jax.random.PRNGKey(1), cfg, 1)
+    fn = METHODS[method]
+    if method == "stbon":
+        import functools
+        # ST-BoN's fixed buffer window scales with the gating horizon so
+        # truncation happens well before EOS at toy sequence lengths
+        fn = functools.partial(fn, buffer_window=max(2, kcfg.horizon))
+    acc = lt = ct = 0
+    fbt = 0.0
+    peak = 0
+    t0 = time.time()
+    for i, prob in enumerate(test):
+        r = fn(params, cfg, kcfg, np.array(prob.prompt), jax.random.PRNGKey(i),
+               eos_id=tok.EOS, bos_id=tok.BOS, frontend=fe)
+        acc += tasks.check_answer(r.tokens, prob)
+        lt += r.logical_tokens
+        ct += r.compute_tokens
+        fbt += len(r.tokens)
+        peak = max(peak, r.peak_cache_bytes)
+    out = {
+        "arch": arch, "method": method, "n": n,
+        "accuracy": acc / len(test),
+        "final_branch_tokens": fbt / len(test),
+        "total_tokens": lt / len(test),
+        "compute_tokens": ct / len(test),
+        "peak_memory_mb": peak / 1e6,
+        "time_s": time.time() - t0,
+    }
+    if verbose:
+        print(f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
+              f"total_toks={out['total_tokens']:8.1f} "
+              f"peak={out['peak_memory_mb']:8.3f}MB t={out['time_s']:.1f}s")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--method", default="kappa", choices=sorted(METHODS))
+    ap.add_argument("--n", type=int, default=5)
+    ap.add_argument("--problems", type=int, default=20)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--max-new", type=int, default=48)
+    args = ap.parse_args(argv)
+    serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
+               ckpt=args.ckpt, max_new=args.max_new)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""GQA attention: full-causal / sliding-window, prefill + decode paths.
+
+Layouts
+-------
+hidden     x : (B, S, d)
+query      q : (B, S, H, hd)
+key/value    : (B, S, KV, hd)
+full cache   : (B, S_max, KV, hd), written at absolute position
+ring cache   : (B, W, KV, hd), slot = pos % W  (sliding-window layers)
+
+All softmax math is fp32; inputs/outputs stay in the model dtype.
+The decode path has a pure-jnp implementation here; the Pallas
+flash-decode kernel (kernels/decode_attn) is an optional drop-in used
+when ``repro.kernels.use_pallas()`` is true.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.rope import apply_rope
+
+NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaN from inf-inf in padding rows
+
+# query-chunk size for the memory-bounded prefill/train path
+Q_CHUNK = 1024
+
+
+def init_attn(rng, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, qkv_bias: bool, dtype):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, num_heads, num_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, S, num_kv_heads, head_dim)
+    v = v.reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,KV,G,hd)  k: (B,Sk,KV,hd) -> (B,KV,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _attend(q, k, v, mask):
+    """Masked softmax attention. q:(B,Sq,KV,G,hd) k,v:(B,Sk,KV,hd)
+    mask broadcastable to (B,KV,G,Sq,Sk). Returns (B,Sq,KV,G,hd)."""
+    hd = q.shape[-1]
+    scores = _gqa_scores(q, k) * (hd ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def attn_forward(p, x, positions, *, num_heads: int, num_kv_heads: int,
+                 head_dim: int, window: int, rope_theta: float,
+                 use_rope: bool) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill). window<=0 → global.
+
+    Scans over query chunks so live score memory is O(Q_CHUNK · S), not
+    O(S²) — required for the 32k prefill shape to fit HBM.
+    """
+    B, S, d = x.shape
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q = q.reshape(B, S, num_kv_heads, G, head_dim)
+
+    kv_pos = positions  # (B, S) or (S,)
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos, (B, S))
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, C, KV, G, hd); qpos_blk: (B, C)
+        m = qpos_blk[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
+        if window > 0:
+            m &= (qpos_blk[:, None, None, :, None] - kv_pos[:, None, None, None, :]) < window
+        return _attend(q_blk, k, v, m)
+
+    out = _chunked_q(block, q, kv_pos, B, S, num_kv_heads, G, head_dim)
+    out = out.reshape(B, S, num_heads * head_dim)
+    return out @ p["wo"]
+
+
+def _chunked_q(block, q, kv_pos, B, S, num_kv_heads, G, head_dim):
+    """Scan ``block`` over query chunks (pads S up to a Q_CHUNK multiple;
+    padded queries get position −1 → fully masked → sliced away)."""
+    if S <= Q_CHUNK:
+        return block(q, kv_pos)
+    nc = -(-S // Q_CHUNK)
+    Sp = nc * Q_CHUNK
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S)) + ((0, 0),) * (q.ndim - 2))
+        kv_pos_q = jnp.pad(kv_pos, ((0, 0), (0, Sp - S)), constant_values=-1)
+    else:
+        kv_pos_q = kv_pos
+    qc = q.reshape(B, nc, Q_CHUNK, num_kv_heads, G, head_dim)
+    pc = kv_pos_q.reshape(B, nc, Q_CHUNK)
+    out = jax.lax.scan(
+        lambda _, xs: (None, block(xs[0], xs[1])),
+        None, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)))[1]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sp, num_kv_heads, G, head_dim)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------- caches
+#
+# KV caches come in two flavours:
+#   bf16/f32:  {"k": (B,S,KV,hd), "v": ...} in the model dtype
+#   int8:      {"k","v": int8, "k_s","v_s": (B,S,KV) f32 per-token-head
+#               absmax scales} — halves decode HBM traffic (§Perf B)
+
+def init_full_cache(batch: int, max_seq: int, num_kv_heads: int,
+                    head_dim: int, dtype, quantized: bool = False):
+    shp = (batch, max_seq, num_kv_heads, head_dim)
+    if quantized:
+        return {"k": jnp.zeros(shp, jnp.int8), "v": jnp.zeros(shp, jnp.int8),
+                "k_s": jnp.zeros(shp[:3], jnp.float32),
+                "v_s": jnp.zeros(shp[:3], jnp.float32)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def init_ring_cache(batch: int, window: int, num_kv_heads: int,
+                    head_dim: int, dtype, quantized: bool = False):
+    return init_full_cache(batch, window, num_kv_heads, head_dim, dtype,
+                           quantized)
+
+
+def _is_quantized(cache) -> bool:
+    return cache["k"].dtype == jnp.int8
+
+
+def _quantize_kv(x):
+    """x: (..., hd) → (int8 values, (...,) f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def write_ring_from_kv(cache, k, v, positions):
+    """Fill a ring (or short full) cache from already-computed K/V
+    (used by the halo-attention prefill path). k, v: (B, S, KV, hd)."""
+    S = k.shape[1]
+    W = cache["k"].shape[1]
+    quant = _is_quantized(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+    else:
+        kq, vq, ks, vs = k, v, None, None
+    if W < S:
+        slots = jnp.mod(positions[-W:], W)
+        new = {
+            "k": jnp.zeros_like(cache["k"]).at[:, slots].set(
+                kq[:, -W:].astype(cache["k"].dtype)),
+            "v": jnp.zeros_like(cache["v"]).at[:, slots].set(
+                vq[:, -W:].astype(cache["v"].dtype)),
+        }
+        if quant:
+            new["k_s"] = jnp.zeros_like(cache["k_s"]).at[:, slots].set(ks[:, -W:])
+            new["v_s"] = jnp.zeros_like(cache["v_s"]).at[:, slots].set(vs[:, -W:])
+    else:
+        new = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], kq.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], vq.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+        if quant:
+            new["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, 0, 0))
+            new["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, 0, 0))
+    return new
+
+
+def ring_slot_positions(pos, window: int):
+    """Absolute position held by each ring slot when the newest write is at
+    ``pos``: slot s holds the largest p <= pos with p ≡ s (mod W)."""
+    s = jnp.arange(window)
+    return pos - jnp.mod(pos - s, window)
+
+
+# ---------------------------------------------------------------- prefill
+
+def attn_prefill(p, x, positions, cache, *, num_heads: int, num_kv_heads: int,
+                 head_dim: int, window: int, rope_theta: float,
+                 use_rope: bool):
+    """Run full attention over the prompt AND populate the cache.
+
+    positions: (S,) absolute, shared across batch (lockstep engine).
+    Returns (y, new_cache)."""
+    B, S, _ = x.shape
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    qr = q.reshape(B, S, num_kv_heads, G, head_dim)
+    kv_pos = jnp.broadcast_to(positions, (B, S))
+
+    def block(q_blk, qpos_blk):
+        m = qpos_blk[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
+        if window > 0:
+            m &= (qpos_blk[:, None, None, :, None] - kv_pos[:, None, None, None, :]) < window
+        return _attend(q_blk, k, v, m)
+
+    out = _chunked_q(block, qr, kv_pos, B, S, num_kv_heads, G, head_dim)
+    y = out.reshape(B, S, num_heads * head_dim) @ p["wo"]
+
+    W = cache["k"].shape[1]
+    quant = _is_quantized(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+    else:
+        kq, vq, ks, vs = k, v, None, None
+    if window > 0 and W < S:
+        # ring cache: keep the last W tokens, rotated so slot = pos % W
+        slots = jnp.mod(positions[-W:], W)
+        new = {
+            "k": jnp.zeros_like(cache["k"]).at[:, slots].set(
+                kq[:, -W:].astype(cache["k"].dtype)),
+            "v": jnp.zeros_like(cache["v"]).at[:, slots].set(
+                vq[:, -W:].astype(cache["v"].dtype)),
+        }
+        if quant:
+            new["k_s"] = jnp.zeros_like(cache["k_s"]).at[:, slots].set(ks[:, -W:])
+            new["v_s"] = jnp.zeros_like(cache["v_s"]).at[:, slots].set(vs[:, -W:])
+    else:
+        new = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], kq.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], vq.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+        if quant:
+            new["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, 0, 0))
+            new["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, 0, 0))
+    return y, new
+
+
+# ---------------------------------------------------------------- decode
+
+def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
+                head_dim: int, window: int, rope_theta: float,
+                use_rope: bool):
+    """One-token decode. x: (B, 1, d); pos: scalar absolute position.
+    Returns (y (B,1,d), new_cache)."""
+    B = x.shape[0]
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    posa = jnp.full((1,), pos)
+    if use_rope:
+        q = apply_rope(q, posa, rope_theta)
+        k = apply_rope(k, posa, rope_theta)
+
+    W = cache["k"].shape[1]
+    is_ring = window > 0 and W <= window
+    slot = jnp.mod(pos, W) if is_ring else pos
+    quant = _is_quantized(cache)
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0))
+        new_cache["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0))
+    else:
+        kq, vq = k, v
+    new_cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], kq.astype(cache["k"].dtype), (0, slot, 0, 0))
+    new_cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vq.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_k = new_cache["k"] if not quant else _dequantize_kv(
+        new_cache["k"], new_cache["k_s"], x.dtype)
+    new_v = new_cache["v"] if not quant else _dequantize_kv(
+        new_cache["v"], new_cache["v_s"], x.dtype)
+
+    if is_ring:
+        kv_positions = ring_slot_positions(pos, W)          # (W,)
+        valid = (kv_positions >= 0) & (kv_positions <= pos)
+        if window > 0:
+            valid &= (pos - kv_positions) < window
+    else:
+        kv_positions = jnp.arange(W)
+        valid = kv_positions <= pos
+        if window > 0:
+            valid &= (pos - kv_positions) > -1
+            valid &= (pos - kv_positions) < window
+
+    qr = q.reshape(B, 1, num_kv_heads, G, head_dim)
+    mask = valid[None, None, None, None, :]
+    out = _attend(qr, new_k, new_v, mask)
+    y = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return y, new_cache
+
+
+# ------------------------------------------------- halo attention (SP)
+#
+# §Perf hillclimb C iteration 2: with sequence parallelism the residual
+# stream is seq-sharded on "model". A sliding-window layer does NOT need
+# the full sequence gathered — each shard attends to its own tokens plus
+# a window-sized halo from its left neighbour (one collective-permute of
+# W tokens instead of an all-gather of S). Requires W ≤ S/shards.
+
+_HALO_MESH = None
+
+
+def set_halo_mesh(mesh) -> None:
+    global _HALO_MESH
+    _HALO_MESH = mesh
+
+
+def halo_attn_available(seq_len: int, window: int, model_size: int) -> bool:
+    return (_HALO_MESH is not None and seq_len % model_size == 0
+            and window <= seq_len // model_size)
+
+
+def attn_forward_halo(p, x, *, num_heads: int, num_kv_heads: int,
+                      head_dim: int, window: int, rope_theta: float,
+                      use_rope: bool, dp_axes=("pod", "data"),
+                      model_axis: str = "model", return_kv: bool = False):
+    """Sliding-window attention over a seq-sharded residual stream.
+
+    x: (B, S, d) logically; sharded (dp, model, None). Returns y with the
+    same sharding (and optionally the full-precision k, v for cache fill).
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh = _HALO_MESH
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    M = mesh.shape[model_axis]
+
+    def inner(wq, wk, wv, wo, bq, bk, bv, xl):
+        B, S_loc, d = xl.shape
+        idx = jax.lax.axis_index(model_axis)
+        base = idx * S_loc
+        q = xl @ wq
+        k = xl @ wk
+        v = xl @ wv
+        if bq is not None:
+            q, k, v = q + bq, k + bk, v + bv
+        q = q.reshape(B, S_loc, num_heads, head_dim)
+        k = k.reshape(B, S_loc, num_kv_heads, head_dim)
+        v = v.reshape(B, S_loc, num_kv_heads, head_dim)
+        positions = base + jnp.arange(S_loc)
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+
+        W = min(window, S_loc)
+        perm = [(j, j + 1) for j in range(M - 1)]  # shard j → j+1
+        k_halo = jax.lax.ppermute(k[:, -W:], model_axis, perm)
+        v_halo = jax.lax.ppermute(v[:, -W:], model_axis, perm)
+        k_full = jnp.concatenate([k_halo, k], axis=1)   # (B, W+S_loc, KV, hd)
+        v_full = jnp.concatenate([v_halo, v], axis=1)
+        kv_pos = base - W + jnp.arange(W + S_loc)       # halo positions < base
+
+        G = num_heads // num_kv_heads
+        qr = q.reshape(B, S_loc, num_kv_heads, G, head_dim)
+        qp = positions[None, :]
+        kp = kv_pos[None, :]
+        mask = (qp[:, None, None, :, None] >= kp[:, None, None, None, :]) \
+            & ((qp[:, None, None, :, None] - kp[:, None, None, None, :]) < window) \
+            & (kp[:, None, None, None, :] >= 0)
+        out = _attend(qr, k_full, v_full, mask)
+        y = out.reshape(B, S_loc, num_heads * head_dim) @ wo
+        return y, k, v
+
+    xspec = P(dp if dp else None, model_axis, None)
+    try:
+        from jax import shard_map as _sm
+        f = _sm(inner, mesh=mesh, check_vma=False,
+                in_specs=(P(), P(), P(), P(), P(), P(), P(), xspec),
+                out_specs=(xspec, xspec, xspec))
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm2
+        f = _sm2(inner, mesh=mesh, check_rep=False,
+                 in_specs=(P(), P(), P(), P(), P(), P(), P(), xspec),
+                 out_specs=(xspec, xspec, xspec))
+    bq, bk, bv = p.get("bq"), p.get("bk"), p.get("bv")
+    y, k, v = f(p["wq"], p["wk"], p["wv"], p["wo"], bq, bk, bv, x)
+    if return_kv:
+        return y, k, v
+    return y
+
+
+# ---------------------------------------------------------------- cross
+
+def init_cross_attn(rng, d_model: int, num_heads: int, num_kv_heads: int,
+                    head_dim: int, dtype):
+    return init_attn(rng, d_model, num_heads, num_kv_heads, head_dim, False, dtype)
+
+
+def cross_attn_kv(p, enc_out, num_kv_heads: int, head_dim: int):
+    """Precompute K,V from encoder output: (B, S_enc, KV, hd) each."""
+    B, S, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S, num_kv_heads, head_dim)
+    v = (enc_out @ p["wv"]).reshape(B, S, num_kv_heads, head_dim)
+    return k, v
+
+
+def cross_attn(p, x, enc_k, enc_v, *, num_heads: int, num_kv_heads: int,
+               head_dim: int):
+    """Decoder→encoder cross attention (no causal mask, no rope)."""
+    B, S, _ = x.shape
+    G = num_heads // num_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, num_kv_heads, G, head_dim)
+    mask = jnp.ones((1, 1, 1, 1, enc_k.shape[1]), bool)
+    out = _attend(q, enc_k, enc_v, mask)
+    return out.reshape(B, S, num_heads * head_dim) @ p["wo"]

@@ -1,0 +1,30 @@
+"""STUB modality frontends (the one allowed carve-out).
+
+The assigned [audio]/[vlm] entries specify the transformer backbone only;
+``input_specs()`` provides precomputed frame/patch embeddings of the
+right shape. These helpers generate those embeddings (for smoke tests /
+examples) and describe their ShapeDtypeStructs (for the dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    """Shape of the stub embeddings the frontend would produce."""
+    if cfg.frontend is None:
+        return None
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def stub_frontend(rng, cfg: ModelConfig, batch: int, dtype=None):
+    """Random-but-deterministic stand-in for InternViT patch embeddings /
+    whisper log-mel conv features."""
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)

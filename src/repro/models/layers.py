@@ -1,0 +1,47 @@
+"""Basic layers: norms, embeddings, initializers, logits head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LLM init)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in fp32 math, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table):
+    """Project hidden states to vocabulary logits. table: (V, d)."""
+    return jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+
+
+def sinusoidal_positions(num_pos: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position embeddings (num_pos, dim)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    pos = jnp.arange(num_pos)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)

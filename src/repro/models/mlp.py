@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (LLaMA family) and GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "wg": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wu": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "wd": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def init_gelu_mlp(rng, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "wi": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "wd": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["wi"]) @ p["wd"]

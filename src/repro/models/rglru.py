@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (d_rnn = d_model here):
+  x ─┬─ gate branch:  y_g = gelu(x @ w_gy)
+     └─ rnn branch:   u = causal depthwise conv4(x @ w_gx)
+                      i_t = σ(u @ w_i + b_i)   (input gate)
+                      r_t = σ(u @ w_r + b_r)   (recurrence gate)
+                      a_t = exp(-c · softplus(Λ) · r_t)
+                      h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ u_t)
+  y = (h ⊙ y_g) @ w_out
+
+Training/prefill uses an associative scan (log-depth on TPU); decode is a
+single fused step. State = {h: (B,d), conv: (B,3,d)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+_CONV_W = 4
+
+
+def init_rglru(rng, d_model: int, dtype):
+    ks = jax.random.split(rng, 6)
+    d = d_model
+    return {
+        "w_gx": dense_init(ks[0], (d, d), dtype=dtype),
+        "w_gy": dense_init(ks[1], (d, d), dtype=dtype),
+        "conv": dense_init(ks[2], (_CONV_W, d), scale=0.5, dtype=dtype),
+        "w_i": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_r": dense_init(ks[4], (d, d), dtype=dtype),
+        # Λ init so that a = exp(-c·softplus(Λ)·σ(·)) spans useful decays
+        "lam": jnp.linspace(-4.0, 4.0, d).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (d, d), dtype=dtype),
+    }
+
+
+def _gates(p, u):
+    i = jax.nn.sigmoid(u @ p["w_i"])
+    r = jax.nn.sigmoid(u @ p["w_r"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i * u).astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(p, x, state=None):
+    """Full-sequence forward. x: (B,S,d) → (y, final_state)."""
+    B, S, d = x.shape
+    u0 = x @ p["w_gx"]
+    yg = jax.nn.gelu(x @ p["w_gy"])
+
+    conv_hist = jnp.zeros((B, _CONV_W - 1, d), x.dtype) if state is None else state["conv"]
+    u_pad = jnp.concatenate([conv_hist, u0], axis=1)          # (B, S+3, d)
+    # causal depthwise conv, width 4
+    u = sum(u_pad[:, i:i + S] * p["conv"][_CONV_W - 1 - i] for i in range(_CONV_W))
+
+    a, b = _gates(p, u)                                        # fp32 (B,S,d)
+    h0 = jnp.zeros((B, d), jnp.float32) if state is None else state["h"]
+    # fold h0 into the first step, then associative linear-recurrence scan
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    y = (h.astype(x.dtype) * yg) @ p["w_out"]
+    new_state = {"h": h[:, -1], "conv": u0[:, -(_CONV_W - 1):]}
+    return y, new_state
+
+
+def rglru_step(p, x, state):
+    """One-token decode. x: (B,1,d)."""
+    B, _, d = x.shape
+    u0 = x[:, 0] @ p["w_gx"]                                   # (B,d)
+    yg = jax.nn.gelu(x[:, 0] @ p["w_gy"])
+    hist = jnp.concatenate([state["conv"], u0[:, None]], axis=1)  # (B,4,d) oldest→newest
+    # forward path weights position (t - j) with conv[j]: newest gets conv[0]
+    u = jnp.einsum("bwd,wd->bd", hist, p["conv"][::-1])
+    a, b = _gates(p, u[:, None])                               # (B,1,d)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h.astype(x.dtype) * yg) @ p["w_out"]
+    return y[:, None], {"h": h, "conv": hist[:, 1:]}
+
+
+def init_rglru_state(batch: int, d_model: int, dtype):
+    return {"h": jnp.zeros((batch, d_model), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, d_model), dtype)}

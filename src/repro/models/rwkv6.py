@@ -1,0 +1,156 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): time-mix with data-dependent
+decay + channel-mix FFN. Attention-free; per-head state S ∈ R^{hd×hd}.
+
+Time-mix recurrence (per head, key dim i, value dim j):
+    S_t[i,j] = w_t[i] · S_{t-1}[i,j] + k_t[i] · v_t[j]
+    o_t[j]   = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i] · k_t[i] · v_t[j])
+with data-dependent decay w_t = exp(-exp(w0 + lora_w(x̄_t))) ∈ (0,1).
+
+Inputs to r/k/v/g/w projections are data-dependent token-shift lerps
+(ddlerp) between x_t and x_{t-1} — the core Finch novelty.
+
+The pure-jnp sequential scan here is the oracle; kernels/rwkv6_scan holds
+the chunked Pallas TPU kernel.
+
+State = {"S": (B,H,hd,hd) fp32, "x_tm": (B,d), "x_cm": (B,d)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_LORA = 32  # rank of the ddlerp / decay loras
+
+
+def init_rwkv6(rng, d_model: int, d_ff: int, num_heads: int, head_dim: int, dtype):
+    assert num_heads * head_dim == d_model
+    ks = jax.random.split(rng, 16)
+    d = d_model
+    p = {
+        # time-mix projections
+        "w_r": dense_init(ks[0], (d, d), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype=dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype=dtype),
+        # ddlerp: mu base + low-rank data-dependent part, for r/k/v/w/g
+        "mu": dense_init(ks[5], (5, d), scale=0.3, dtype=jnp.float32),
+        "lora_a": dense_init(ks[6], (d, 5 * _LORA), dtype=dtype),
+        "lora_b": dense_init(ks[7], (5, _LORA, d), scale=0.01, dtype=jnp.float32),
+        # decay: w0 base + lora
+        "w0": jnp.linspace(-7.0, 1.0, d).astype(jnp.float32),
+        "wa": dense_init(ks[8], (d, _LORA), dtype=dtype),
+        "wb": dense_init(ks[9], (_LORA, d), scale=0.01, dtype=jnp.float32),
+        # per-key bonus
+        "u": dense_init(ks[10], (num_heads, head_dim), scale=0.5, dtype=jnp.float32),
+        # per-head groupnorm
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": dense_init(ks[11], (d, d_ff), dtype=dtype),
+        "cm_wr": dense_init(ks[12], (d, d), dtype=dtype),
+        "cm_wv": dense_init(ks[13], (d_ff, d), dtype=dtype),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: returns (xr, xk, xv, xw, xg)."""
+    dx = x_prev - x                                             # (..., d)
+    lo = jnp.tanh(dx @ p["lora_a"])                             # (..., 5*LORA)
+    lo = lo.reshape(*lo.shape[:-1], 5, _LORA)
+    dd = jnp.einsum("...fl,fld->...fd", lo.astype(jnp.float32), p["lora_b"])
+    mix = p["mu"] + dd                                          # (..., 5, d)
+    out = x[..., None, :] + dx[..., None, :] * mix.astype(x.dtype)
+    return tuple(out[..., f, :] for f in range(5))
+
+
+def _decay(p, xw):
+    lo = jnp.tanh(xw @ p["wa"]).astype(jnp.float32) @ p["wb"]
+    return jnp.exp(-jnp.exp(p["w0"] + lo))                      # (..., d) in (0,1)
+
+
+def _group_norm(x, scale, num_heads, eps=64e-5):
+    """Per-head LayerNorm over head_dim. x: (B, H, hd)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.reshape(*x.shape[:-2], -1) * scale
+
+
+def time_mix(p, x, state, *, num_heads: int, head_dim: int):
+    """Full-sequence time-mix. x: (B,S,d) → (y, new_state_partial)."""
+    B, S, d = x.shape
+    H, hd = num_heads, head_dim
+    x_prev = jnp.concatenate([state["x_tm"][:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["w_r"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(p, xw).reshape(B, S, H, hd)                      # (B,S,H,hd)
+
+    def step(S_c, inp):
+        r_t, k_t, v_t, w_t = inp                                # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]              # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", r_t,
+                         S_c + p["u"][None, :, :, None] * kv)
+        S_n = w_t[..., :, None] * S_c + kv
+        return S_n, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S_fin, outs = jax.lax.scan(step, state["S"], xs)
+    out = jnp.moveaxis(outs, 0, 1)                              # (B,S,H,hd)
+    out = _group_norm(out, p["gn_scale"], H).astype(x.dtype)
+    y = (out * g) @ p["w_o"]
+    return y, {"S": S_fin, "x_tm": x[:, -1]}
+
+
+def time_mix_step(p, x, state, *, num_heads: int, head_dim: int):
+    """One-token decode. x: (B,1,d)."""
+    B, _, d = x.shape
+    H, hd = num_heads, head_dim
+    xt = x[:, 0]
+    xr, xk, xv, xw, xg = _ddlerp(p, xt, state["x_tm"])
+    r = (xr @ p["w_r"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    w = _decay(p, xw).reshape(B, H, hd)
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhi,bhij->bhj", r, state["S"] + p["u"][None, :, :, None] * kv)
+    S_n = w[..., :, None] * state["S"] + kv
+    out = _group_norm(out, p["gn_scale"], H).astype(x.dtype)
+    y = (out * g) @ p["w_o"]
+    return y[:, None], {"S": S_n, "x_tm": xt}
+
+
+def channel_mix(p, x, state):
+    """Full-sequence channel-mix FFN with token shift."""
+    x_prev = jnp.concatenate([state["x_cm"][:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["cm_mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    y = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return y, {"x_cm": x[:, -1]}
+
+
+def channel_mix_step(p, x, state):
+    xt = x[:, 0]
+    xk = xt + (state["x_cm"] - xt) * p["cm_mu_k"].astype(x.dtype)
+    xr = xt + (state["x_cm"] - xt) * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    y = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return y[:, None], {"x_cm": xt}
+
+
+def init_rwkv6_state(batch: int, d_model: int, num_heads: int,
+                     head_dim: int, dtype):
+    return {
+        "S": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "x_tm": jnp.zeros((batch, d_model), dtype),
+        "x_cm": jnp.zeros((batch, d_model), dtype),
+    }

@@ -1,0 +1,106 @@
+"""Cache utilities: batch-axis bookkeeping, compaction gathers, byte
+accounting.
+
+Cache pytrees from repro.models.init_cache have two leaf families:
+  "stack" / "xkv_stack" leaves: (K, B, ...) — batch is axis 1
+  "rem"   / "xkv_rem"   leaves: (B, ...)    — batch is axis 0
+
+Bucketed compaction (the TPU-native replacement for PyTorch's eager
+per-branch KV freeing, DESIGN.md §2): when the number of live branches
+falls to the next power-of-two bucket, gather live rows into a smaller
+cache. Each bucket size is a distinct compiled shape; the bucket chain
+N → 2^⌈log2 N⌉-1 → … → 1 bounds recompilation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+def _map_batched(cache: Dict[str, Any], fn_stack, fn_rem):
+    out = {}
+    for key, val in cache.items():
+        if key.endswith("stack"):
+            out[key] = jax.tree.map(fn_stack, val)
+        else:
+            out[key] = jax.tree.map(fn_rem, val)
+    return out
+
+
+def gather_batch(cache, idx):
+    """Select branch rows ``idx`` from every cache leaf."""
+    return _map_batched(cache, lambda a: a[:, idx], lambda a: a[idx])
+
+
+def broadcast_batch(cache, n: int):
+    """Replicate a batch-1 cache to n branches (post-prefill fan-out)."""
+    def rep(a, axis):
+        reps = [1] * a.ndim
+        reps[axis] = n
+        return jnp.tile(a, reps)
+    return _map_batched(cache, lambda a: rep(a, 1), lambda a: rep(a, 0))
+
+
+def cache_bytes(cache) -> int:
+    """Total bytes held by the cache pytree (the branch-scaling part of
+    peak memory — our static-shape analogue of the paper's M_peak)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))
+
+
+def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int) -> int:
+    """Paged-allocator view of cache memory: bytes actually *referenced*
+    with ``rows`` live branch rows after ``pos`` positions.
+
+    The paper's peak-memory numbers come from PyTorch's dynamically grown
+    KV tensors; a TPU serving stack gets the same effect with a paged KV
+    allocator (pages freed on branch prune / never allocated past pos).
+    This analytic accounting is the static-shape analogue used for the
+    M_cost metric."""
+    it = jnp.dtype(cfg.dtype).itemsize
+    if cfg.kv_cache_dtype == "int8":
+        it_kv = 1.0 + 4.0 / cfg.resolved_head_dim  # int8 + amortized scale
+    else:
+        it_kv = it
+    hd = cfg.resolved_head_dim
+    total = 0
+    for bt in cfg.block_types():
+        if bt == "global":
+            total += rows * min(pos, max_seq) * cfg.num_kv_heads * hd * 2 * it_kv
+        elif bt == "local":
+            w = min(cfg.window_size, max_seq)
+            total += rows * min(pos, w) * cfg.num_kv_heads * hd * 2 * it_kv
+        elif bt == "recurrent":
+            total += rows * (cfg.d_model * 4 + cfg.d_model * 3 * it)  # h fp32 + conv
+        elif bt == "rwkv6":
+            total += rows * (cfg.num_heads * hd * hd * 4 + 2 * cfg.d_model * it)
+    if cfg.is_encoder_decoder:
+        total += cfg.num_layers * rows * cfg.encoder_seq_len \
+            * cfg.num_kv_heads * hd * 2 * it
+    return int(total)
+
+
+def bucket_chain(n: int) -> List[int]:
+    """Descending bucket sizes: n, then powers of two below n, down to 1."""
+    out = [n]
+    b = 1
+    while b < n:
+        b <<= 1
+    b >>= 1
+    while b >= 1:
+        if b < n:
+            out.append(b)
+        b >>= 1
+    return out
+
+
+def next_bucket(chain: List[int], alive: int, current: int) -> int:
+    """Smallest bucket in the chain that still fits ``alive`` branches and
+    is smaller than ``current`` (or ``current`` if no shrink possible)."""
+    best = current
+    for b in chain:
+        if b < best and b >= alive:
+            best = b
+    return best

@@ -1,0 +1,31 @@
+"""Jittable sampling: temperature + top-k + top-p (paper §4.1:
+T=0.7, k=20, p=0.95)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sample(rng, logits, *, temperature: float = 0.7, top_k: int = 20,
+           top_p: float = 0.95):
+    """logits: (B, V) fp32 → (B,) int32 sampled tokens.
+    temperature <= 0 → greedy argmax."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / temperature
+    k = min(top_k, l.shape[-1]) if top_k > 0 else l.shape[-1]
+    vals, idx = jax.lax.top_k(l, k)                       # (B, k) sorted desc
+    if 0.0 < top_p < 1.0:
+        probs = jax.nn.softmax(vals, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        # keep tokens whose *previous* cumulative mass < p (always keep 1st)
+        keep = (csum - probs) < top_p
+        vals = jnp.where(keep, vals, NEG_INF)
+    choice = jax.random.categorical(rng, vals, axis=-1)   # (B,)
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

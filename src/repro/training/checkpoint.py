@@ -1,0 +1,45 @@
+"""Msgpack-based checkpointing (orbax is not available offline)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack(obj: Any):
+    leaves, treedef = jax.tree.flatten(obj)
+    blobs = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        blobs.append({"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()})
+    return blobs, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    blobs, _ = _pack(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(blobs, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        blobs = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(blobs) == len(leaves), \
+        f"checkpoint has {len(blobs)} leaves, expected {len(leaves)}"
+    out = []
+    for blob, leaf in zip(blobs, leaves):
+        arr = np.frombuffer(blob["data"], dtype=np.dtype(blob["dtype"]))
+        arr = arr.reshape(blob["shape"])
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), \
+            f"shape mismatch {arr.shape} vs {np.shape(leaf)}"
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,72 @@
+"""Training substrate: masked-LM loss + jittable train_step.
+
+``train_step`` (here, shape-polymorphic over batch) is also the dry-run
+lowering target for the ``train_4k`` input shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import train_logits
+from repro.training.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_lr,
+)
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+
+
+def init_train_state(rng, cfg: ModelConfig) -> TrainState:
+    from repro.models import init_params
+    params = init_params(rng, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, loss_mask, frontend=None,
+            aux_weight: float = 0.01):
+    """Next-token cross-entropy over masked positions + MoE aux loss."""
+    logits, aux = train_logits(params, cfg, tokens, frontend)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = loss_mask[:, :-1]
+    loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def train_step(state: TrainState, cfg: ModelConfig, tokens, loss_mask,
+               step, frontend=None, *, base_lr: float = 3e-3,
+               warmup: int = 50, total: int = 2000):
+    (total_loss, (loss, aux)), grads = jax.value_and_grad(
+        lm_loss, has_aux=True)(state.params, cfg, tokens, loss_mask, frontend)
+    grads, gnorm = clip_by_global_norm(grads, 1.0)
+    lr = cosine_lr(step, base_lr=base_lr, warmup=warmup, total=total)
+    params, opt = adamw_update(grads, state.opt, state.params, lr=lr)
+    return TrainState(params, opt), {"loss": loss, "aux": aux,
+                                     "gnorm": gnorm, "lr": lr}
+
+
+def train_step_fn(cfg: ModelConfig, base_lr: float = 3e-3,
+                  warmup: int = 50, total: int = 2000):
+    """Non-jitted closure version (for pjit wrapping in launch/train.py)."""
+    def fn(state: TrainState, tokens, loss_mask, step, frontend=None):
+        (tl, (loss, aux)), grads = jax.value_and_grad(
+            lm_loss, has_aux=True)(state.params, cfg, tokens, loss_mask, frontend)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_lr(step, base_lr=base_lr, warmup=warmup, total=total)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr)
+        return TrainState(params, opt), {"loss": loss, "aux": aux,
+                                         "gnorm": gnorm, "lr": lr}
+    return fn

@@ -1,0 +1,5 @@
+"""Lock jax to the single host CPU device before any test import can
+touch dry-run machinery (which sets XLA_FLAGS for its own process)."""
+import jax
+
+_ = jax.devices()  # initialize backend: tests must see exactly 1 device

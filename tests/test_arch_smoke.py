@@ -1,0 +1,67 @@
+"""Per-architecture smoke tests (deliverable f): instantiate the REDUCED
+variant of each assigned family, run one forward/train step on CPU,
+assert output shapes + no NaNs, and check prefill+decode ≡ teacher-forced
+logits (the serving-correctness invariant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config
+from repro.models import decode_step, init_cache, init_params, prefill, train_logits
+from repro.models.frontends import stub_frontend
+from repro.training.train import init_train_state, train_step
+
+ALL = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    fe = stub_frontend(jax.random.PRNGKey(2), cfg, B)
+    logits, aux = train_logits(params, cfg, tokens, fe)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_prefill_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch).reduced()
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    fe = stub_frontend(jax.random.PRNGKey(2), cfg, B)
+    logits, _ = train_logits(params, cfg, tokens, fe)
+
+    cache = init_cache(cfg, B, max_seq=32)
+    pf, cache = prefill(params, cfg, tokens[:, :S - 1], cache, fe)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(logits[:, S - 2]),
+                               rtol=2e-4, atol=2e-4)
+    n_prefix = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
+    dec, cache = decode_step(params, cfg, tokens[:, S - 1],
+                             jnp.int32(S - 1 + n_prefix), cache)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits[:, S - 1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    mask = jnp.ones((B, S), jnp.float32)
+    fe = stub_frontend(jax.random.PRNGKey(2), cfg, B)
+    state, metrics = train_step(state, cfg, tokens, mask, jnp.int32(0), fe)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["gnorm"]))
+    # params actually moved
+    l0 = jax.tree.leaves(state.params)[0]
+    assert bool(jnp.all(jnp.isfinite(l0)))

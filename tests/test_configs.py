@@ -1,0 +1,93 @@
+"""Config registry: all assigned architectures, reduced variants,
+shape applicability."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    all_configs,
+    applicable_shapes,
+    get_config,
+)
+
+EXPECTED = {
+    "granite-moe-3b-a800m": dict(num_layers=32, d_model=1536, num_heads=24,
+                                 num_kv_heads=8, d_ff=512, vocab_size=49155,
+                                 num_experts=40, experts_per_tok=8),
+    "qwen1.5-4b": dict(num_layers=40, d_model=2560, num_heads=20,
+                       num_kv_heads=20, d_ff=6912, vocab_size=151936,
+                       qkv_bias=True),
+    "gemma3-4b": dict(num_layers=34, d_model=2560, num_heads=8,
+                      num_kv_heads=4, d_ff=10240, vocab_size=262144),
+    "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048, num_heads=32,
+                              num_kv_heads=4, d_ff=768, vocab_size=151936,
+                              num_experts=128, experts_per_tok=8),
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "internvl2-76b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=28672, vocab_size=128256),
+    "starcoder2-3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                          num_kv_heads=2, d_ff=12288, vocab_size=49152),
+    "whisper-small": dict(num_layers=12, d_model=768, num_heads=12,
+                          num_kv_heads=12, d_ff=3072, vocab_size=51865),
+    "granite-3-8b": dict(num_layers=40, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12800, vocab_size=49155),
+    "rwkv6-3b": dict(num_layers=32, d_model=2560, d_ff=8960,
+                     vocab_size=65536),
+}
+
+
+def test_all_ten_assigned_archs_present():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert set(EXPECTED) == set(ASSIGNED_ARCHS)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_config(arch):
+    cfg = get_config(arch)
+    for field, val in EXPECTED[arch].items():
+        assert getattr(cfg, field) == val, f"{arch}.{field}"
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_variant_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_input_shapes_exact():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_applicability():
+    """long_500k only for sub-quadratic-capable archs (DESIGN.md §4)."""
+    runs = {a for a in ASSIGNED_ARCHS
+            if "long_500k" in applicable_shapes(get_config(a))}
+    assert runs == {"gemma3-4b", "recurrentgemma-9b", "starcoder2-3b",
+                    "rwkv6-3b"}
+
+
+def test_every_arch_gets_first_three_shapes():
+    for arch in ASSIGNED_ARCHS:
+        shapes = applicable_shapes(get_config(arch))
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+def test_param_counts_in_family_ballpark():
+    # analytic counts should land near the model names' advertised sizes
+    assert 2.5e9 < get_config("granite-moe-3b-a800m").param_count() < 4.0e9
+    assert 25e9 < get_config("qwen3-moe-30b-a3b").param_count() < 33e9
+    assert 2.0e9 < get_config("qwen3-moe-30b-a3b").active_param_count() < 4.0e9
+    assert 60e9 < get_config("internvl2-76b").param_count() < 80e9
+    assert 7e9 < get_config("granite-3-8b").param_count() < 9.5e9

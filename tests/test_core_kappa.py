@@ -1,0 +1,223 @@
+"""KAPPA core: signals, robustification, scoring, schedule, controller."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import KappaConfig
+from repro.core import kappa as K
+from repro.core import robust, schedule, scoring, signals
+
+
+# ------------------------------------------------------------- signals
+
+def test_signals_match_manual():
+    rng = jax.random.PRNGKey(0)
+    logits = jax.random.normal(rng, (4, 100)) * 2
+    qlogits = jax.random.normal(jax.random.PRNGKey(1), (100,))
+    log_q = signals.reference_log_q(qlogits)
+    kl, conf, ent = signals.compute_signals(logits, log_q)
+
+    p = np.asarray(jax.nn.softmax(logits, axis=-1), np.float64)
+    q = np.asarray(jnp.exp(log_q), np.float64)
+    np.testing.assert_allclose(np.asarray(kl), (p * np.log(p / q)).sum(-1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(conf), p.max(-1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ent), -(p * np.log(p + 1e-9)).sum(-1),
+                               rtol=1e-4)
+
+
+def test_kl_nonnegative_and_zero_iff_equal():
+    logits = jnp.tile(jnp.arange(50.0), (3, 1))
+    log_q = signals.reference_log_q(jnp.arange(50.0))
+    kl, _, _ = signals.compute_signals(logits, log_q)
+    np.testing.assert_allclose(np.asarray(kl), 0.0, atol=1e-5)
+    kl2, _, _ = signals.compute_signals(logits + jnp.eye(3, 50) * 5, log_q)
+    assert np.all(np.asarray(kl2) >= -1e-6)
+
+
+# --------------------------------------------------------------- robust
+
+def test_median_of_means_resists_outlier():
+    w, m = 16, 4
+    clean = jnp.ones((1, w))
+    dirty = clean.at[0, 3].set(1e6)  # one catastrophic outlier
+    est = robust.median_of_means(dirty, jnp.int32(w), m)
+    assert float(est[0]) < 1e5, "MoM must not follow a single outlier"
+    mean = float(jnp.mean(dirty))
+    assert abs(float(est[0]) - 1.0) < abs(mean - 1.0)
+
+
+def test_median_of_means_partial_window():
+    w, m = 8, 4
+    buf = jnp.zeros((2, w)).at[:, :3].set(5.0)  # only 3 valid entries
+    est = robust.median_of_means(buf, jnp.int32(3), m)
+    np.testing.assert_allclose(np.asarray(est), 5.0, rtol=1e-6)
+
+
+def test_ema_debias_first_step_identity():
+    ema = robust.ema_update(jnp.zeros(3), jnp.array([1.0, 2.0, 3.0]), 0.5)
+    hat = robust.ema_debias(ema, jnp.int32(1), 0.5)
+    np.testing.assert_allclose(np.asarray(hat), [1.0, 2.0, 3.0], rtol=1e-6)
+
+
+def test_ema_converges_to_constant():
+    ema = jnp.zeros(1)
+    for t in range(1, 60):
+        ema = robust.ema_update(ema, jnp.array([7.0]), 0.5)
+    hat = robust.ema_debias(ema, jnp.int32(59), 0.5)
+    np.testing.assert_allclose(np.asarray(hat), 7.0, rtol=1e-5)
+
+
+# -------------------------------------------------------------- scoring
+
+def test_masked_zscore_ignores_dead_branches():
+    x = jnp.array([1.0, 2.0, 3.0, 1e9])
+    alive = jnp.array([True, True, True, False])
+    z = scoring.masked_zscore(x, alive)
+    np.testing.assert_allclose(float(z[3]), 0.0)
+    live = np.asarray(z[:3])
+    assert abs(live.mean()) < 1e-5
+    assert np.all(np.abs(live) <= 3.0)
+
+
+def test_trajectory_weights_recent_more():
+    num = jnp.zeros(2)
+    den = jnp.float32(0.0)
+    # branch 0: good early, bad late; branch 1: the reverse
+    for t, s in [(1, jnp.array([1.0, -1.0])), (2, jnp.array([1.0, -1.0])),
+                 (3, jnp.array([-1.0, 1.0])), (4, jnp.array([-1.0, 1.0]))]:
+        num, den, traj = scoring.trajectory_update(num, den, s, jnp.int32(t))
+    assert float(traj[1]) > float(traj[0]), "recent steps must weigh more"
+
+
+# ------------------------------------------------------------- schedule
+
+@pytest.mark.parametrize("kind", ["linear", "cosine", "step"])
+def test_schedule_monotone_and_terminates_at_one(kind):
+    n, horizon = 10, 16
+    rs = [int(schedule.survivors(kind, n, jnp.int32(t), horizon))
+          for t in range(horizon)]
+    assert all(1 <= r <= n for r in rs)
+    assert all(a >= b for a, b in zip(rs, rs[1:])), f"{kind} not monotone: {rs}"
+    assert rs[-1] == 1, f"{kind} must end at 1: {rs}"
+
+
+def test_linear_schedule_matches_paper_formula():
+    n, horizon = 8, 8
+    for t in range(horizon):
+        r = int(schedule.survivors("linear", n, jnp.int32(t), horizon))
+        expected = max(1, n - ((t + 1) * n) // horizon)
+        assert r == expected
+
+
+# ----------------------------------------------------------- controller
+
+def _mk_cfg(**kw):
+    base = dict(num_branches=4, adaptive_cutoff=False, draft_cutoff=2,
+                horizon=4, window=8, mom_buckets=4, max_new_tokens=64)
+    base.update(kw)
+    return KappaConfig(**base)
+
+
+def _logits_for(good_branch, n=4, v=64, sharp=8.0):
+    """Branch `good_branch` gets a confident (low-entropy, high-KL-vs-
+    uniform) distribution; others get near-uniform noise."""
+    base = jnp.zeros((n, v))
+    base = base.at[good_branch, 7].set(sharp)
+    return base + jax.random.normal(jax.random.PRNGKey(0), (n, v)) * 0.01
+
+
+def test_kappa_prunes_to_single_survivor():
+    cfg = _mk_cfg()
+    state = K.init_state(cfg)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    tokens = jnp.arange(4, dtype=jnp.int32)  # all distinct
+    for t in range(12):
+        state = K.kappa_step(state, _logits_for(2), tokens, log_q, cfg)
+    assert int(K.num_alive(state)) == 1
+    assert int(K.survivor_index(state)) == 2, "confident branch must survive"
+
+
+def test_kappa_never_prunes_all():
+    cfg = _mk_cfg()
+    state = K.init_state(cfg)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    for t in range(20):
+        state = K.kappa_step(state, logits, jnp.arange(4, dtype=jnp.int32),
+                             log_q, cfg)
+        assert int(K.num_alive(state)) >= 1
+
+
+def test_kappa_no_pruning_during_draft():
+    cfg = _mk_cfg(draft_cutoff=5)
+    state = K.init_state(cfg)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    for t in range(5):
+        state = K.kappa_step(state, _logits_for(0), jnp.arange(4, dtype=jnp.int32),
+                             log_q, cfg)
+        if t < 4:  # still in draft on the first 5 steps (cutoff at step>=5)
+            assert int(K.num_alive(state)) == 4
+
+
+def test_adaptive_cutoff_waits_for_divergence():
+    cfg = _mk_cfg(adaptive_cutoff=True, max_cutoff=50)
+    state = K.init_state(cfg)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    same = jnp.zeros(4, dtype=jnp.int32)  # identical tokens → no divergence
+    for _ in range(6):
+        state = K.kappa_step(state, _logits_for(1), same, log_q, cfg)
+    assert not bool(state.in_gating)
+    distinct = jnp.arange(4, dtype=jnp.int32)
+    state = K.kappa_step(state, _logits_for(1), distinct, log_q, cfg)
+    assert bool(state.in_gating)
+
+
+def test_compact_state_preserves_per_branch_rows():
+    cfg = _mk_cfg()
+    state = K.init_state(cfg)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    for t in range(3):
+        state = K.kappa_step(state, _logits_for(1), jnp.arange(4, dtype=jnp.int32),
+                             log_q, cfg)
+    idx = jnp.array([1, 3])
+    small = K.compact_state(state, idx)
+    np.testing.assert_allclose(np.asarray(small.traj),
+                               np.asarray(state.traj[idx]))
+    np.testing.assert_allclose(np.asarray(small.di_buf),
+                               np.asarray(state.di_buf[idx]))
+    assert small.diverged.shape == (2, 2)
+
+
+def test_adaptive_horizon_scales_with_difficulty():
+    """Paper §5 future work: flat (hard) distributions lengthen τ,
+    sharp (easy) ones shorten it."""
+    cfg = _mk_cfg(draft_cutoff=1, horizon=8, adaptive_horizon=True)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+
+    def run(logits):
+        st = K.init_state(cfg)
+        for _ in range(3):
+            st = K.kappa_step(st, logits, jnp.arange(4, dtype=jnp.int32),
+                              log_q, cfg)
+        return int(st.horizon_dyn)
+
+    tau_hard = run(jnp.zeros((4, 64)))          # maximum entropy
+    tau_easy = run(jnp.eye(4, 64) * 20.0)       # near-deterministic
+    assert tau_hard == 16                        # 2×τ cap
+    assert tau_easy == 4                         # τ/2 floor
+    assert tau_hard > tau_easy
+
+
+def test_adaptive_horizon_frozen_after_entry():
+    cfg = _mk_cfg(draft_cutoff=1, horizon=8, adaptive_horizon=True)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    st = K.init_state(cfg)
+    flat = jnp.zeros((4, 64))
+    sharp = jnp.eye(4, 64) * 20.0
+    for _ in range(3):
+        st = K.kappa_step(st, flat, jnp.arange(4, dtype=jnp.int32), log_q, cfg)
+    tau_at_entry = int(st.horizon_dyn)
+    for _ in range(3):  # later sharp logits must not rewrite τ
+        st = K.kappa_step(st, sharp, jnp.arange(4, dtype=jnp.int32), log_q, cfg)
+    assert int(st.horizon_dyn) == tau_at_entry

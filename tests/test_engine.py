@@ -1,0 +1,122 @@
+"""Serving-engine behaviour: all four strategies, compaction, memory and
+token accounting invariants (random tiny model — accuracy-free checks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import KappaConfig
+from repro.data import tokenizer as tok
+from repro.models import init_params
+from repro.serving import cache as cache_lib
+from repro.serving import engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("deepseek-r1-distill-qwen-1.5b").reduced(
+        num_layers=2, d_model=64, vocab_size=tok.VOCAB_SIZE)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    kcfg = KappaConfig(num_branches=5, max_new_tokens=24, max_cutoff=4,
+                       horizon=6, window=8, mom_buckets=4)
+    prompt = np.array([tok.BOS, tok.PROB, 3, tok.PLUS, 4, tok.EQ, tok.QM])
+    return cfg, params, kcfg, prompt
+
+
+def test_greedy_deterministic(setup):
+    cfg, params, kcfg, prompt = setup
+    r1 = engine.generate_greedy(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                                eos_id=tok.EOS, bos_id=tok.BOS)
+    r2 = engine.generate_greedy(params, cfg, kcfg, prompt, jax.random.PRNGKey(7),
+                                eos_id=tok.EOS, bos_id=tok.BOS)
+    assert r1.tokens == r2.tokens
+    assert r1.logical_tokens == r1.compute_tokens == len(r1.tokens)
+
+
+def test_bon_generates_n_branches(setup):
+    cfg, params, kcfg, prompt = setup
+    r = engine.generate_bon(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                            eos_id=tok.EOS, bos_id=tok.BOS)
+    assert 0 <= r.chosen_branch < kcfg.num_branches
+    assert r.logical_tokens <= kcfg.num_branches * kcfg.max_new_tokens
+    assert len(r.extra["neg_ppl"]) == kcfg.num_branches
+    # chosen branch maximizes negative perplexity
+    assert r.chosen_branch == int(np.argmax(r.extra["neg_ppl"]))
+
+
+def test_kappa_prunes_and_compacts(setup):
+    cfg, params, kcfg, prompt = setup
+    r = engine.generate_kappa(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                              eos_id=tok.EOS, bos_id=tok.BOS)
+    assert r.compactions, "KAPPA must shrink the branch batch"
+    assert r.compactions == sorted(r.compactions, reverse=True)
+    assert r.compactions[-1] <= 2
+    assert 0 <= r.chosen_branch < kcfg.num_branches
+
+
+def test_kappa_cheaper_than_bon(setup):
+    cfg, params, kcfg, prompt = setup
+    rb = engine.generate_bon(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                             eos_id=tok.EOS, bos_id=tok.BOS)
+    rk = engine.generate_kappa(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                               eos_id=tok.EOS, bos_id=tok.BOS)
+    assert rk.logical_tokens < rb.logical_tokens
+    assert rk.peak_cache_bytes <= rb.peak_cache_bytes
+
+
+def test_stbon_truncates_to_one(setup):
+    cfg, params, kcfg, prompt = setup
+    r = engine.generate_stbon(params, cfg, kcfg, prompt, jax.random.PRNGKey(0),
+                              eos_id=tok.EOS, bos_id=tok.BOS, buffer_window=4)
+    assert r.compactions == [1]
+    assert r.extra["cutoff"] is not None
+
+
+def test_compaction_disabled_keeps_batch(setup):
+    cfg, params, kcfg, prompt = setup
+    kcfg2 = KappaConfig(num_branches=5, max_new_tokens=24, max_cutoff=4,
+                        horizon=6, window=8, mom_buckets=4, compaction=False)
+    r = engine.generate_kappa(params, cfg, kcfg2, prompt, jax.random.PRNGKey(0),
+                              eos_id=tok.EOS, bos_id=tok.BOS)
+    assert r.compactions == []
+    assert r.compute_tokens >= r.logical_tokens
+
+
+def test_token_log_tracks_all_branches(setup):
+    cfg, params, kcfg, prompt = setup
+    r = engine.generate_kappa(params, cfg, kcfg, prompt, jax.random.PRNGKey(1),
+                              eos_id=tok.EOS, bos_id=tok.BOS)
+    assert r.all_tokens.shape[0] == kcfg.num_branches
+    assert (r.lengths > 0).all()
+    assert r.lengths[r.chosen_branch] >= len(r.tokens)
+
+
+# ------------------------------------------------------- cache helpers
+
+def test_broadcast_then_gather_roundtrip():
+    cfg = get_config("gemma3-4b").reduced(d_model=64)
+    from repro.models import init_cache
+    c1 = init_cache(cfg, 1, 16)
+    cn = cache_lib.broadcast_batch(c1, 4)
+    for key in ("stack", "rem"):
+        for l1, ln in zip(jax.tree.leaves(c1[key]), jax.tree.leaves(cn[key])):
+            assert ln.shape != l1.shape
+    c2 = cache_lib.gather_batch(cn, jnp.array([0]))
+    for l1, l2 in zip(jax.tree.leaves(c1), jax.tree.leaves(cn)):
+        pass
+    for l1, l2 in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        assert l1.shape == l2.shape
+
+
+def test_used_cache_bytes_monotone():
+    cfg = get_config("granite-3-8b")
+    b1 = cache_lib.used_cache_bytes(cfg, 5, 100, 4096)
+    b2 = cache_lib.used_cache_bytes(cfg, 5, 200, 4096)
+    b3 = cache_lib.used_cache_bytes(cfg, 10, 200, 4096)
+    assert b1 < b2 < b3
+    # ring-bounded archs saturate
+    cfg2 = get_config("rwkv6-3b")
+    s1 = cache_lib.used_cache_bytes(cfg2, 5, 100, 4096)
+    s2 = cache_lib.used_cache_bytes(cfg2, 5, 4000, 4096)
+    assert s1 == s2, "rwkv6 state is O(1) in sequence length"

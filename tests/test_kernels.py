@@ -1,0 +1,142 @@
+"""Pallas kernel sweeps: shapes × dtypes, assert_allclose against the
+pure-jnp ref.py oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.fused_score.ops import fused_score
+from repro.kernels.fused_score.ref import fused_score_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+# ------------------------------------------------------------ fused_score
+
+@pytest.mark.parametrize("B,V", [(1, 128), (5, 1000), (8, 4096), (16, 2048),
+                                 (3, 50257), (2, 151936)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_score_sweep(B, V, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(B * V))
+    logits = (jax.random.normal(k1, (B, V)) * 3).astype(dtype)
+    log_q = jax.nn.log_softmax(jax.random.normal(k2, (V,)))
+    out = fused_score(logits, log_q)
+    ref = fused_score_ref(logits, log_q)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    for o, r, name in zip(out, ref, ["kl", "conf", "ent"]):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=tol, atol=tol, err_msg=name)
+
+
+def test_fused_score_extreme_logits():
+    """Large-magnitude logits must not overflow the online softmax."""
+    logits = jnp.array([[1e4, 0.0, -1e4] + [0.0] * 125,
+                        [-1e4] * 64 + [1e4] * 64])
+    log_q = jax.nn.log_softmax(jnp.zeros(128))
+    kl, conf, ent = fused_score(logits, log_q)
+    rkl, rconf, rent = fused_score_ref(logits, log_q)
+    assert np.all(np.isfinite(np.asarray(kl)))
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(rconf), rtol=1e-4)
+
+
+def test_fused_score_odd_vocab_padding():
+    """Non-tile-multiple vocab (e.g. granite's 49155) pads correctly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    logits = jax.random.normal(k1, (4, 49155))
+    log_q = jax.nn.log_softmax(jax.random.normal(k2, (49155,)))
+    out = fused_score(logits, log_q)
+    ref = fused_score_ref(logits, log_q)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-4,
+                                   atol=1e-5)
+
+
+# ------------------------------------------------------------ decode_attn
+
+@pytest.mark.parametrize("B,H,KV,hd,S,pos,window,ring", [
+    (2, 8, 2, 64, 256, 100, 0, False),       # GQA, early pos
+    (1, 4, 4, 32, 512, 511, 0, False),       # MHA, cache full
+    (2, 6, 3, 128, 300, 299, 64, False),     # sliding window, odd S
+    (2, 4, 1, 64, 128, 500, 128, True),      # MQA ring buffer, wrapped
+    (1, 16, 2, 64, 1024, 700, 256, True),    # ring, window < ring size
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn_sweep(B, H, KV, hd, S, pos, window, ring, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(hash((B, H, S, pos)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(dtype)
+    out = decode_attn(q, k, v, pos, window=window, ring=ring)
+    ref = decode_attn_ref(q, k, v, pos, window=window, ring=ring)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attn_pos_zero():
+    """Only slot 0 valid — attention must equal v[:, 0]."""
+    B, H, KV, hd, S = 1, 2, 2, 16, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = decode_attn(q, k, v, 0)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(v[0, 0, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- rwkv6_scan
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (2, 64, 3, 32, 16), (1, 128, 2, 64, 32), (2, 50, 2, 16, 32),
+    (1, 33, 4, 64, 16),
+])
+@pytest.mark.parametrize("with_s0", [False, True])
+def test_rwkv6_scan_sweep(B, T, H, hd, chunk, with_s0):
+    ks = jax.random.split(jax.random.PRNGKey(T * hd + with_s0), 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1 if with_s0 else None
+    y, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    s0_ref = s0 if s0 is not None else jnp.zeros((B, H, hd, hd))
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u, s0_ref)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr), rtol=3e-4, atol=3e-4)
+
+
+def test_rwkv6_scan_tiny_decays():
+    """Near-zero decay (strong forgetting) must stay finite in the
+    log-space chunked form."""
+    B, T, H, hd = 1, 32, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.full((B, T, H, hd), 1e-6)
+    u = jnp.zeros((H, hd))
+    y, sf = rwkv6_scan(r, k, v, w, u, chunk=16)
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u, jnp.zeros((B, H, hd, hd)))
+    assert np.all(np.isfinite(np.asarray(y)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_chunk_boundary_equivalence():
+    """Different chunk sizes give identical results (associativity)."""
+    B, T, H, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+    u = jnp.ones((H, hd)) * 0.3
+    y16, s16 = rwkv6_scan(r, k, v, w, u, chunk=16)
+    y32, s32 = rwkv6_scan(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y32), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s32), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,180 @@
+"""Model-substrate unit tests: attention masking, ring caches, MoE
+dispatch, RG-LRU/RWKV6 state passing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv6_lib
+
+
+def _attn_params(rng, d, h, kv, hd, bias=False):
+    return attn.init_attn(rng, d, h, kv, hd, bias, jnp.float32)
+
+
+def test_causal_mask_exact():
+    """Token t must not see tokens > t: perturbing the future leaves
+    logits at t unchanged."""
+    d, h, kv, hd, S = 32, 4, 2, 8, 10
+    p = _attn_params(jax.random.PRNGKey(0), d, h, kv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, d))
+    pos = jnp.arange(S)
+    y1 = attn.attn_forward(p, x, pos, num_heads=h, num_kv_heads=kv, head_dim=hd,
+                           window=0, rope_theta=1e4, use_rope=True)
+    x2 = x.at[:, -1].set(99.0)
+    y2 = attn.attn_forward(p, x2, pos, num_heads=h, num_kv_heads=kv, head_dim=hd,
+                           window=0, rope_theta=1e4, use_rope=True)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_blocks_far_past():
+    """With window w, token t must not see tokens < t−w+1."""
+    d, h, kv, hd, S, w = 32, 4, 2, 8, 12, 3
+    p = _attn_params(jax.random.PRNGKey(0), d, h, kv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, d))
+    pos = jnp.arange(S)
+    y1 = attn.attn_forward(p, x, pos, num_heads=h, num_kv_heads=kv, head_dim=hd,
+                           window=w, rope_theta=1e4, use_rope=True)
+    x2 = x.at[:, 0].set(-55.0)  # outside every window for t >= w
+    y2 = attn.attn_forward(p, x2, pos, num_heads=h, num_kv_heads=kv, head_dim=hd,
+                           window=w, rope_theta=1e4, use_rope=True)
+    np.testing.assert_allclose(np.asarray(y1[:, w:]), np.asarray(y2[:, w:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_equals_unchunked():
+    """Query-chunked attention path ≡ single-block path (incl. a
+    non-multiple length that exercises the padding branch)."""
+    d, h, kv, hd = 32, 4, 2, 8
+    p = _attn_params(jax.random.PRNGKey(0), d, h, kv, hd)
+    for S in (attn.Q_CHUNK * 2, attn.Q_CHUNK + 37):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, S, d)) * 0.3
+        pos = jnp.arange(S)
+        y_chunk = attn.attn_forward(p, x, pos, num_heads=h, num_kv_heads=kv,
+                                    head_dim=hd, window=0, rope_theta=1e4,
+                                    use_rope=True)
+        old = attn.Q_CHUNK
+        try:
+            attn.Q_CHUNK = S + 1  # force the single-block path
+            y_full = attn.attn_forward(p, x, pos, num_heads=h, num_kv_heads=kv,
+                                       head_dim=hd, window=0, rope_theta=1e4,
+                                       use_rope=True)
+        finally:
+            attn.Q_CHUNK = old
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_full),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_ring_cache_decode_matches_full_cache():
+    """Sliding-window decode with a ring cache ≡ full cache + window mask."""
+    d, h, kv, hd, W = 32, 4, 2, 8, 4
+    p = _attn_params(jax.random.PRNGKey(0), d, h, kv, hd)
+    T = 10
+    xs = jax.random.normal(jax.random.PRNGKey(1), (T, 1, 1, d)) * 0.5
+
+    ring = attn.init_ring_cache(1, W, kv, hd, jnp.float32)
+    full = attn.init_full_cache(1, T, kv, hd, jnp.float32)
+    for t in range(T):
+        yr, ring = attn.attn_decode(p, xs[t], jnp.int32(t), ring, num_heads=h,
+                                    num_kv_heads=kv, head_dim=hd, window=W,
+                                    rope_theta=1e4, use_rope=True)
+        yf, full = attn.attn_decode(p, xs[t], jnp.int32(t), full, num_heads=h,
+                                    num_kv_heads=kv, head_dim=hd, window=W,
+                                    rope_theta=1e4, use_rope=True)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(yf),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"t={t}")
+
+
+# ----------------------------------------------------------------- MoE
+
+def test_moe_dropless_equals_manual():
+    """Dropless top-k routing ≡ per-token dense expert mixture."""
+    d, ff, E, K = 16, 32, 4, 2
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), d, ff, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, d))
+    y, aux = moe_lib.moe_ffn(p, x, num_experts=E, experts_per_tok=K,
+                             capacity_factor=0.0)
+
+    xt = np.asarray(x).reshape(-1, d)
+    logits = xt @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    top = np.argsort(-probs, axis=-1)[:, :K]
+    manual = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        wsum = probs[t, top[t]].sum()
+        for e in top[t]:
+            h = np.maximum(xt[t] @ np.asarray(p["wg"][e]), 0)  # silu approx below
+            h = (xt[t] @ np.asarray(p["wg"][e]))
+            h = h / (1 + np.exp(-h)) * (xt[t] @ np.asarray(p["wu"][e]))
+            manual[t] += (probs[t, e] / wsum) * (h @ np.asarray(p["wd"][e]))
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, d), manual,
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor≪1 some tokens must be dropped (zero output)."""
+    d, ff, E, K = 8, 16, 4, 2
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), d, ff, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d))
+    y_drop, _ = moe_lib.moe_ffn(p, x, num_experts=E, experts_per_tok=K,
+                                capacity_factor=0.1)
+    y_full, _ = moe_lib.moe_ffn(p, x, num_experts=E, experts_per_tok=K,
+                                capacity_factor=0.0)
+    assert not np.allclose(np.asarray(y_drop), np.asarray(y_full))
+
+
+# ------------------------------------------------------- recurrent blocks
+
+def test_rglru_forward_equals_stepwise():
+    d = 16
+    p = rglru_lib.init_rglru(jax.random.PRNGKey(0), d, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, d)) * 0.5
+    y_full, st_full = rglru_lib.rglru_forward(p, x)
+    st = rglru_lib.init_rglru_state(2, d, jnp.float32)
+    ys = []
+    for t in range(7):
+        y, st = rglru_lib.rglru_step(p, x[:, t:t + 1], st)
+        ys.append(y)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_full["h"]), np.asarray(st["h"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_state_carries_across_segments():
+    """forward(x) ≡ forward(x[:4]) then forward(x[4:], state)."""
+    d = 16
+    p = rglru_lib.init_rglru(jax.random.PRNGKey(0), d, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, d)) * 0.5
+    y_all, _ = rglru_lib.rglru_forward(p, x)
+    y1, st = rglru_lib.rglru_forward(p, x[:, :4])
+    y2, _ = rglru_lib.rglru_forward(p, x[:, 4:], st)
+    np.testing.assert_allclose(np.asarray(y_all),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_time_mix_forward_equals_stepwise():
+    d, H, hd, ff = 32, 2, 16, 64
+    p = rwkv6_lib.init_rwkv6(jax.random.PRNGKey(0), d, ff, H, hd, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, d)) * 0.5
+    st0 = rwkv6_lib.init_rwkv6_state(1, d, H, hd, jnp.float32)
+    y_full, stf = rwkv6_lib.time_mix(p, x, st0, num_heads=H, head_dim=hd)
+    st = st0
+    ys = []
+    for t in range(6):
+        y, st = rwkv6_lib.time_mix_step(p, x[:, t:t + 1], st, num_heads=H,
+                                        head_dim=hd)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(stf["S"]), np.asarray(st["S"]),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,19 @@
+"""Expert-parallel shard_map MoE: validated in a subprocess with an
+8-device host mesh (this test process must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_expert_parallel_matches_oracle_on_8_device_mesh():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "validate_moe_ep.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "dropless oracle: OK" in proc.stdout
+    assert "gradients: OK" in proc.stdout

@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import KappaConfig
+from repro.core import robust, schedule, scoring
+from repro.core.kappa import _prune
+from repro.data import tasks
+from repro.data import tokenizer as tok
+from repro.serving import cache as cache_lib
+from repro.serving import sampler
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ------------------------------------------------------------- schedule
+
+@given(n=st.integers(2, 64), horizon=st.integers(1, 64),
+       kind=st.sampled_from(["linear", "cosine", "step"]))
+@settings(**SETTINGS)
+def test_schedule_invariants(n, horizon, kind):
+    prev = n
+    for t in range(horizon):
+        r = int(schedule.survivors(kind, n, jnp.int32(t), horizon))
+        assert 1 <= r <= n
+        assert r <= prev, f"{kind} must be non-increasing"
+        prev = r
+    assert prev == 1, f"{kind} must reach exactly 1 at the horizon end"
+
+
+# ---------------------------------------------------------------- prune
+
+@given(n=st.integers(2, 16), r=st.integers(1, 16), seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_prune_keeps_exactly_r_of_alive(n, r, seed):
+    rng = np.random.default_rng(seed)
+    alive = jnp.asarray(rng.random(n) < 0.8)
+    traj = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    keep = _prune(alive, traj, jnp.int32(r))
+    kept = np.asarray(keep)
+    al = np.asarray(alive)
+    assert not np.any(kept & ~al), "prune must never resurrect dead branches"
+    n_alive = al.sum()
+    assert kept.sum() == min(r, n_alive) or n_alive == 0
+    # kept branches are the top-scoring alive ones
+    if kept.sum() and kept.sum() < n_alive:
+        worst_kept = np.asarray(traj)[kept].min()
+        best_dropped = np.asarray(traj)[al & ~kept].max()
+        assert worst_kept >= best_dropped
+
+
+# --------------------------------------------------------------- zscore
+
+@given(n=st.integers(2, 32), seed=st.integers(0, 999),
+       clip=st.floats(0.5, 5.0))
+@settings(**SETTINGS)
+def test_zscore_bounded_and_centered(n, seed, clip):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=10, size=n).astype(np.float32))
+    alive = jnp.asarray(rng.random(n) < 0.7)
+    z = np.asarray(scoring.masked_zscore(x, alive, clip))
+    assert np.all(np.abs(z) <= clip + 1e-5)
+    assert np.all(z[~np.asarray(alive)] == 0.0)
+
+
+# ------------------------------------------------------------------ MoM
+
+@given(w_buckets=st.sampled_from([(8, 2), (8, 4), (16, 4), (32, 8)]),
+       seed=st.integers(0, 999))
+@settings(**SETTINGS)
+def test_mom_bounded_by_data_range(w_buckets, seed):
+    w, m = w_buckets
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(3, w)).astype(np.float32)
+    est = np.asarray(robust.median_of_means(jnp.asarray(data), jnp.int32(w), m))
+    assert np.all(est >= data.min(-1) - 1e-5)
+    assert np.all(est <= data.max(-1) + 1e-5)
+
+
+@given(seed=st.integers(0, 999), scale=st.floats(10.0, 1e6))
+@settings(**SETTINGS)
+def test_mom_beats_mean_under_one_outlier(seed, scale):
+    w, m = 16, 4
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=w).astype(np.float32)
+    data[int(rng.integers(w))] += scale
+    est = float(robust.median_of_means(jnp.asarray(data)[None], jnp.int32(w), m)[0])
+    mean = float(data.mean())
+    true = 0.0
+    assert abs(est - true) <= abs(mean - true) + 1e-3
+
+
+# -------------------------------------------------------------- sampler
+
+@given(seed=st.integers(0, 500), k=st.integers(1, 20),
+       p=st.floats(0.1, 1.0))
+@settings(**SETTINGS)
+def test_sampler_respects_topk_support(seed, k, p):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    toks = sampler.sample(jax.random.PRNGKey(seed), logits,
+                          temperature=0.7, top_k=k, top_p=p)
+    topk_sets = np.argsort(-np.asarray(logits), axis=-1)[:, :k]
+    for b in range(3):
+        assert int(toks[b]) in topk_sets[b]
+
+
+def test_sampler_greedy_is_argmax():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(5, 32)))
+    toks = sampler.sample(jax.random.PRNGKey(0), logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+# ------------------------------------------------------- bucket chains
+
+@given(n=st.integers(1, 129))
+@settings(**SETTINGS)
+def test_bucket_chain_properties(n):
+    chain = cache_lib.bucket_chain(n)
+    assert chain[0] == n and chain[-1] == 1 or n == 1
+    assert all(a > b for a, b in zip(chain, chain[1:]))
+    for alive in range(1, n + 1):
+        b = cache_lib.next_bucket(chain, alive, n)
+        assert b >= alive
+        assert b in chain
+
+
+# ----------------------------------------------------------------- data
+
+@given(seed=st.integers(0, 2000), num_ops=st.integers(1, 3),
+       max_operand=st.integers(2, 96))
+@settings(**SETTINGS)
+def test_task_answer_is_extractable_and_correct(seed, num_ops, max_operand):
+    rng = np.random.default_rng(seed)
+    p = tasks.make_problem(rng, num_ops=num_ops, max_operand=max_operand)
+    assert tok.extract_answer(p.target) == p.answer
+    assert 0 <= p.answer < tok.MOD
+    # target structure: pairs of (ARROW, value) then ANS value EOS
+    assert p.target[-1] == tok.EOS
+    assert p.target[-3] == tok.ANS
+    # prompt is well formed
+    assert p.prompt[0] == tok.BOS and p.prompt[-1] == tok.QM
+
+
+@given(seed=st.integers(0, 2000))
+@settings(**SETTINGS)
+def test_pack_batch_mask_covers_target_only(seed):
+    rng = np.random.default_rng(seed)
+    probs = [tasks.make_problem(rng) for _ in range(4)]
+    toks, mask = tasks.pack_batch(probs, 48)
+    for i, p in enumerate(probs):
+        lo, hi = len(p.prompt), min(len(p.prompt) + len(p.target), 48)
+        assert mask[i, :lo - 1].sum() == 0
+        assert mask[i, lo - 1:hi - 1].sum() == hi - lo

@@ -1,0 +1,90 @@
+"""Unit tests for the roofline HLO parser and the sharding rule engine
+(rules evaluated against an abstract 16×16 mesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import shardings as sh
+from repro.launch.roofline import Roofline, collective_bytes
+
+
+# ------------------------------------------------------------- parser
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), replica_groups={}
+  %ar = f32[256,128]{1,0} all-reduce(%y), to_apply=%sum
+  %tup = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(%a, %b), to_apply=%sum
+  %a2a = bf16[16,64,32]{2,1,0} all-to-all(%z), dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%p, %q)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    cb = collective_bytes(HLO)
+    assert cb["all-gather"] == 2 * 1024 * 512 * 2
+    assert cb["all-reduce"] == 256 * 128 * 4 + 2 * (8 * 128 * 4)
+    assert cb["all-to-all"] == 16 * 64 * 32 * 2
+    assert cb["collective-permute"] == 4 * 4 * 4
+    assert cb["reduce-scatter"] == 0
+
+
+def test_roofline_terms_and_dominant():
+    r = Roofline(flops=197e12, hbm_bytes=0, coll_bytes=0, chips=256,
+                 model_flops=197e12 * 256, argio_bytes=819e9 * 2)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.useful_flops_ratio - 1.0) < 1e-9
+
+
+# ------------------------------------------------------- sharding rules
+
+def _mesh16():
+    try:
+        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        return jax.sharding.AbstractMesh(axis_sizes=(16, 16),
+                                         axis_names=("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return _mesh16()
+
+
+def test_embed_vocab_sharding_fallback(mesh):
+    cfg = get_config("granite-3-8b")
+    # 151936 % 16 == 0 → vocab sharded
+    assert sh.param_spec("embed", (151936, 2048), mesh, cfg) == P("model", None)
+    # 49155 not divisible → falls back to d_model sharding
+    assert sh.param_spec("embed", (49155, 4096), mesh, cfg) == P(None, "model")
+    # neither divisible → replicated
+    assert sh.param_spec("embed", (49155, 333), mesh, cfg) == P()
+
+
+def test_attention_weight_sharding(mesh):
+    cfg = get_config("granite-3-8b")
+    assert sh.param_spec("stack/0/attn/wq", (40, 4096, 4096), mesh, cfg) \
+        == P(None, None, "model")
+    assert sh.param_spec("stack/0/attn/wo", (40, 4096, 4096), mesh, cfg) \
+        == P(None, "model", None)
+
+
+def test_moe_expert_parallel_vs_tensor_fallback(mesh):
+    qwen3 = get_config("qwen3-moe-30b-a3b")   # 128 experts % 16 == 0
+    assert sh.param_spec("stack/0/ffn/wg", (48, 128, 2048, 768), mesh, qwen3) \
+        == P(None, "model", None, None)
+    granite = get_config("granite-moe-3b-a800m")  # 40 experts % 16 != 0
+    spec = sh.param_spec("stack/0/ffn/wg", (32, 40, 1536, 512), mesh, granite)
+    assert spec == P(None, None, None, "model"), "falls back to ff sharding"
+
+
+def test_norms_replicated(mesh):
+    cfg = get_config("granite-3-8b")
+    assert sh.param_spec("stack/0/ln1", (40, 4096), mesh, cfg) == P()
+    assert sh.param_spec("final_norm", (4096,), mesh, cfg) == P()
