@@ -35,3 +35,14 @@ print(f"\nKAPPA vs BoN (N=10): token reduction "
       f"{1 - kap10['total_tokens']/bon10['total_tokens']:.1%}, "
       f"memory reduction {1 - kap10['peak_memory_mb']/bon10['peak_memory_mb']:.1%}, "
       f"accuracy delta {kap10['accuracy'] - bon10['accuracy']:+.3f}")
+
+# the same prompts through the continuous-batching row pool: identical
+# outputs (same per-request keys), but pruned rows are backfilled with
+# queued prefills instead of idling
+seq5 = next(r for r in rows if r["method"] == "kappa" and r["n"] == 5)
+cb5 = serve_eval(args.arch, "kappa", n=5, problems=args.problems,
+                 params=params, cfg=cfg, verbose=False, scheduler=True)
+print(f"continuous batching (N=5, rows=10): {cb5['tokens_per_s']:.1f} tok/s, "
+      f"{cb5['requests_per_s']:.2f} req/s, "
+      f"row utilization {cb5['row_utilization']:.2f} "
+      f"(sequential wall {seq5['time_s']:.1f}s vs {cb5['time_s']:.1f}s)")

@@ -13,7 +13,7 @@ whole decode step jits:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +39,14 @@ class KappaState(NamedTuple):
     horizon_dyn: jnp.ndarray  # scalar int32 — effective τ (adaptive-horizon)
 
 
-def init_state(cfg: KappaConfig) -> KappaState:
-    n, w = cfg.num_branches, cfg.window
+def init_state(cfg: KappaConfig, n: Optional[int] = None) -> KappaState:
+    """Fresh controller state over ``n`` branch rows (default
+    ``cfg.num_branches``). Passing a smaller ``n`` gives a row-subset
+    view for schedulers that admit a request with fewer rows than the
+    configured fan-out; the pruning schedule still anneals from
+    ``cfg.num_branches`` (see kappa_step)."""
+    n = cfg.num_branches if n is None else n
+    w = cfg.window
     eye = jnp.eye(n, dtype=bool)
     return KappaState(
         alive=jnp.ones((n,), bool),

@@ -4,6 +4,10 @@ metric columns.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
       --method kappa --n 5 --problems 20 [--ckpt ckpt.msgpack]
+
+``--scheduler`` serves the same prompts through the continuous-batching
+row pool (repro.serving.scheduler) instead of one at a time, and adds
+throughput columns (requests/s, tokens/s, row utilization).
 """
 from __future__ import annotations
 
@@ -20,6 +24,8 @@ from repro.data import tokenizer as tok
 from repro.models import init_params
 from repro.models.frontends import stub_frontend
 from repro.serving import engine
+from repro.serving import strategies
+from repro.serving.scheduler import ContinuousBatchingScheduler
 from repro.training import checkpoint
 
 METHODS = {
@@ -30,11 +36,21 @@ METHODS = {
 }
 
 
+def _strategy_factory(method: str, kcfg: KappaConfig):
+    if method == "stbon":
+        # ST-BoN's fixed buffer window scales with the gating horizon so
+        # truncation happens well before EOS at toy sequence lengths
+        return lambda: strategies.STBoNStrategy(
+            buffer_window=max(2, kcfg.horizon))
+    return lambda: strategies.make_strategy(method)
+
+
 def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                ckpt: str | None = None, d_model: int = 256,
                num_layers: int = 2, seed: int = 999, max_new: int = 48,
                kcfg_kw: dict | None = None, dataset_kw: dict | None = None,
-               params=None, cfg=None, verbose: bool = True) -> dict:
+               params=None, cfg=None, verbose: bool = True,
+               scheduler: bool = False, sched_rows: int | None = None) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -52,19 +68,33 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
     test = tasks.make_dataset(seed, problems, **dkw)
 
     fe = stub_frontend(jax.random.PRNGKey(1), cfg, 1)
-    fn = METHODS[method]
-    if method == "stbon":
-        import functools
-        # ST-BoN's fixed buffer window scales with the gating horizon so
-        # truncation happens well before EOS at toy sequence lengths
-        fn = functools.partial(fn, buffer_window=max(2, kcfg.horizon))
+    factory = _strategy_factory(method, kcfg)
+    t0 = time.time()
+    if scheduler:
+        n_prefix = engine._n_prefix(cfg)
+        max_seq = max(len(p.prompt) for p in test) + max_new + n_prefix
+        fan_out = factory().rows(kcfg)
+        sched = ContinuousBatchingScheduler(
+            params, cfg, kcfg, rows=sched_rows or 2 * fan_out,
+            max_seq=max_seq, method=method, eos_id=tok.EOS, bos_id=tok.BOS,
+            frontend=fe, strategy_factory=factory)
+        rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i))
+                for i, prob in enumerate(test)]
+        res = sched.run()
+        gens = [res[rid] for rid in rids]
+    else:
+        gens = []
+        for i, prob in enumerate(test):
+            strategy = factory()
+            gens.append(engine._decode_loop(
+                params, cfg, kcfg, np.array(prob.prompt),
+                jax.random.PRNGKey(i), strategy, eos_id=tok.EOS,
+                bos_id=tok.BOS, frontend=fe))
+
     acc = lt = ct = 0
     fbt = 0.0
     peak = 0
-    t0 = time.time()
-    for i, prob in enumerate(test):
-        r = fn(params, cfg, kcfg, np.array(prob.prompt), jax.random.PRNGKey(i),
-               eos_id=tok.EOS, bos_id=tok.BOS, frontend=fe)
+    for prob, r in zip(test, gens):
         acc += tasks.check_answer(r.tokens, prob)
         lt += r.logical_tokens
         ct += r.compute_tokens
@@ -79,10 +109,23 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         "peak_memory_mb": peak / 1e6,
         "time_s": time.time() - t0,
     }
+    if scheduler:
+        tp = sched.throughput()
+        out.update({
+            "tokens_per_s": tp["tokens_per_s"],
+            "requests_per_s": tp["requests_per_s"],
+            "row_utilization": tp["row_utilization"],
+            "ticks": tp["ticks"],
+        })
     if verbose:
-        print(f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
-              f"total_toks={out['total_tokens']:8.1f} "
-              f"peak={out['peak_memory_mb']:8.3f}MB t={out['time_s']:.1f}s")
+        line = (f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
+                f"total_toks={out['total_tokens']:8.1f} "
+                f"peak={out['peak_memory_mb']:8.3f}MB t={out['time_s']:.1f}s")
+        if scheduler:
+            line += (f" | sched: {out['tokens_per_s']:.1f} tok/s "
+                     f"{out['requests_per_s']:.2f} req/s "
+                     f"util={out['row_utilization']:.2f}")
+        print(line)
     return out
 
 
@@ -94,9 +137,14 @@ def main(argv=None):
     ap.add_argument("--problems", type=int, default=20)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching row pool")
+    ap.add_argument("--rows", type=int, default=None,
+                    help="pool rows for --scheduler (default 2x fan-out)")
     args = ap.parse_args(argv)
     serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
-               ckpt=args.ckpt, max_new=args.max_new)
+               ckpt=args.ckpt, max_new=args.max_new,
+               scheduler=args.scheduler, sched_rows=args.rows)
 
 
 if __name__ == "__main__":

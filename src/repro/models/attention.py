@@ -274,12 +274,16 @@ def attn_prefill(p, x, positions, cache, *, num_heads: int, num_kv_heads: int,
 def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
                 head_dim: int, window: int, rope_theta: float,
                 use_rope: bool):
-    """One-token decode. x: (B, 1, d); pos: scalar absolute position.
+    """One-token decode. x: (B, 1, d); pos: scalar absolute position, or
+    (B,) int32 per-row positions (continuous batching: pool rows belong
+    to different requests and advance independently).
     Returns (y (B,1,d), new_cache)."""
     B = x.shape[0]
     G = num_heads // num_kv_heads
     q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
-    posa = jnp.full((1,), pos)
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    posa = pos[:, None] if per_row else jnp.full((1,), pos)
     if use_rope:
         q = apply_rope(q, posa, rope_theta)
         k = apply_rope(k, posa, rope_theta)
@@ -292,33 +296,46 @@ def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
     if quant:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        new_cache["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0))
-        new_cache["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0))
     else:
         kq, vq = k, v
-    new_cache["k"] = jax.lax.dynamic_update_slice(
-        cache["k"], kq.astype(cache["k"].dtype), (0, slot, 0, 0))
-    new_cache["v"] = jax.lax.dynamic_update_slice(
-        cache["v"], vq.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if per_row:
+        rows = jnp.arange(B)
+        if quant:
+            new_cache["k_s"] = cache["k_s"].at[rows, slot].set(ks[:, 0])
+            new_cache["v_s"] = cache["v_s"].at[rows, slot].set(vs[:, 0])
+        new_cache["k"] = cache["k"].at[rows, slot].set(
+            kq[:, 0].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[rows, slot].set(
+            vq[:, 0].astype(cache["v"].dtype))
+    else:
+        if quant:
+            new_cache["k_s"] = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, slot, 0))
+            new_cache["v_s"] = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, slot, 0))
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kq.astype(cache["k"].dtype), (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vq.astype(cache["v"].dtype), (0, slot, 0, 0))
     new_k = new_cache["k"] if not quant else _dequantize_kv(
         new_cache["k"], new_cache["k_s"], x.dtype)
     new_v = new_cache["v"] if not quant else _dequantize_kv(
         new_cache["v"], new_cache["v_s"], x.dtype)
 
+    posq = pos[:, None] if per_row else pos  # (B,1) or scalar
     if is_ring:
-        kv_positions = ring_slot_positions(pos, W)          # (W,)
-        valid = (kv_positions >= 0) & (kv_positions <= pos)
+        kv_positions = ring_slot_positions(posq, W)         # (W,) or (B,W)
+        valid = (kv_positions >= 0) & (kv_positions <= posq)
         if window > 0:
-            valid &= (pos - kv_positions) < window
+            valid &= (posq - kv_positions) < window
     else:
         kv_positions = jnp.arange(W)
-        valid = kv_positions <= pos
+        valid = kv_positions <= posq
         if window > 0:
-            valid &= (pos - kv_positions) > -1
-            valid &= (pos - kv_positions) < window
+            valid &= (posq - kv_positions) > -1
+            valid &= (posq - kv_positions) < window
 
     qr = q.reshape(B, 1, num_kv_heads, G, head_dim)
-    mask = valid[None, None, None, None, :]
+    mask = valid[:, None, None, None, :] if valid.ndim == 2 \
+        else valid[None, None, None, None, :]
     out = _attend(qr, new_k, new_v, mask)
     y = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
     return y, new_cache

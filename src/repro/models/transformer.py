@@ -552,16 +552,24 @@ def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
 
 def decode_step(params, cfg: ModelConfig, token, pos, cache):
     """One decode step. token: (B,) int32; pos: scalar int32 (absolute
-    position of this token). Returns (logits (B, V), new_cache)."""
+    position of this token) or (B,) int32 per-row positions (continuous
+    batching: pool rows belong to different requests).
+    Returns (logits (B, V), new_cache)."""
     pattern = cfg.layer_pattern
     P = len(pattern)
     x = embed(token[:, None], params["embed"])
     if cfg.is_encoder_decoder:
         half = cfg.d_model // 2
         freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
-        ang = pos * freq
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
-        x = x + pe.astype(x.dtype)
+        posf = jnp.asarray(pos)
+        if posf.ndim == 0:
+            ang = posf * freq
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+            x = x + pe.astype(x.dtype)
+        else:
+            ang = posf[:, None].astype(jnp.float32) * freq
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe[:, None, :].astype(x.dtype)
 
     def fn_cycle(x, slices):
         if cfg.is_encoder_decoder:

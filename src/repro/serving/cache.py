@@ -29,9 +29,30 @@ def _map_batched(cache: Dict[str, Any], fn_stack, fn_rem):
     return out
 
 
+def _map_batched2(cache: Dict[str, Any], other: Dict[str, Any],
+                  fn_stack, fn_rem):
+    out = {}
+    for key, val in cache.items():
+        if key.endswith("stack"):
+            out[key] = jax.tree.map(fn_stack, val, other[key])
+        else:
+            out[key] = jax.tree.map(fn_rem, val, other[key])
+    return out
+
+
 def gather_batch(cache, idx):
     """Select branch rows ``idx`` from every cache leaf."""
     return _map_batched(cache, lambda a: a[:, idx], lambda a: a[idx])
+
+
+def scatter_batch(pool, idx, sub):
+    """Write ``sub``'s branch rows into pool rows ``idx`` — the inverse
+    of :func:`gather_batch`, used by the continuous-batching scheduler to
+    install a freshly prefilled request into free slots of its fixed
+    (rows, max_seq) device pool (DESIGN.md §4)."""
+    return _map_batched2(pool, sub,
+                         lambda a, b: a.at[:, idx].set(b),
+                         lambda a, b: a.at[idx].set(b))
 
 
 def broadcast_batch(cache, n: int):
@@ -80,6 +101,17 @@ def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int) -> int:
         total += cfg.num_layers * rows * cfg.encoder_seq_len \
             * cfg.num_kv_heads * hd * 2 * it
     return int(total)
+
+
+def per_request_bytes(cfg, rows_pos: Dict[Any, tuple], max_seq: int
+                      ) -> Dict[Any, int]:
+    """Per-request paged-view byte accounting over a shared row pool:
+    ``rows_pos`` maps request id -> (occupied rows, current pos). Each
+    request is charged only for the slots it owns, referenced up to its
+    own position — the scheduler's analogue of the single-request
+    ``used_cache_bytes`` accounting."""
+    return {rid: used_cache_bytes(cfg, r, p, max_seq)
+            for rid, (r, p) in rows_pos.items()}
 
 
 def bucket_chain(n: int) -> List[int]:

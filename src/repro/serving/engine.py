@@ -1,12 +1,18 @@
 """Serving engine: batched branch decoding for Greedy / BoN / ST-BoN /
 KAPPA with bucketed cache compaction.
 
-The decode loop is a host-side Python loop over a **jitted step** (the
-same architecture as production serving stacks: device step + host
-scheduler). Branch lifecycle:
+One shared decode loop (``_decode_loop``) drives any
+``repro.serving.strategies.DecodeStrategy``: a host-side Python loop over
+a **jitted step** (the same architecture as production serving stacks:
+device step + host scheduler). Branch lifecycle:
 
   prefill(prompt, B=1) ─ broadcast cache to N ─▶ step* ─▶ compaction at
-  power-of-two buckets as KAPPA prunes ─▶ survivor decodes to EOS
+  power-of-two buckets as the strategy prunes ─▶ survivor decodes to EOS
+
+The four public ``generate_*`` functions are thin wrappers binding a
+strategy to the loop. Multi-request continuous batching lives in
+``repro.serving.scheduler`` and reuses the same strategies and jitted
+steps, so both execution modes are token-for-token equivalent.
 
 Two token accountings are kept (see DESIGN.md §2):
   * logical — tokens sampled on live branches (the paper's accounting;
@@ -20,8 +26,7 @@ decode input shapes: one model step + fused KAPPA scoring.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,41 +34,23 @@ import numpy as np
 
 from repro.configs.base import KappaConfig, ModelConfig
 from repro.core import kappa as kappa_lib
-from repro.core.signals import reference_log_q
-from repro.models import decode_step, init_cache, prefill, train_logits
+from repro.models import decode_step, init_cache, prefill
 from repro.serving import cache as cache_lib
 from repro.serving import sampler
-
-
-@dataclass
-class GenResult:
-    tokens: List[int]                 # generated tokens of the chosen branch
-    chosen_branch: int                # original branch index
-    all_tokens: np.ndarray            # (N, T) all branch tokens (-1 pad)
-    lengths: np.ndarray               # (N,) live lengths
-    logical_tokens: int               # paper-style token count
-    compute_tokens: int               # TPU rows actually decoded
-    peak_cache_bytes: int             # branch-scaling memory peak
-    steps: int
-    compactions: List[int] = field(default_factory=list)
-    extra: Dict = field(default_factory=dict)
+from repro.serving import strategies
+from repro.serving.strategies import GenResult  # noqa: F401  (public API)
 
 
 # ------------------------------------------------------------ shared bits
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _bos_log_q(params, cfg: ModelConfig, bos_token, frontend=None):
-    """Unconditional reference logits q from the BOS-only context
-    (Alg. 2 line 9)."""
-    logits, _ = train_logits(params, cfg, bos_token[None, None], frontend)
-    return reference_log_q(logits[0, -1])
+_prefill_jit = jax.jit(prefill, static_argnums=(1,))
 
 
 def _prefill_one(params, cfg: ModelConfig, prompt: np.ndarray, max_seq: int,
                  frontend=None):
     cache = init_cache(cfg, 1, max_seq)
-    fn = jax.jit(prefill, static_argnums=(1,))
-    logits, cache = fn(params, cfg, jnp.asarray(prompt)[None], cache, frontend)
+    logits, cache = _prefill_jit(params, cfg, jnp.asarray(prompt)[None],
+                                 cache, frontend)
     return logits[0], cache
 
 
@@ -74,317 +61,72 @@ def _model_step(params, cfg: ModelConfig, token, pos, cache):
     return decode_step(params, cfg, token, pos, cache)
 
 
-def _sample_step(rng, logits, kcfg: KappaConfig, greedy: bool = False):
-    if greedy:
-        return sampler.greedy(logits)
-    return sampler.sample(rng, logits, temperature=kcfg.temperature,
-                          top_k=kcfg.top_k, top_p=kcfg.top_p)
+def _n_prefix(cfg: ModelConfig) -> int:
+    return cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
 
 
-class _TokenLog:
-    """Host-side per-branch token buffers surviving compaction."""
+# ------------------------------------------------------------ shared loop
 
-    def __init__(self, n: int, max_new: int):
-        self.buf = np.full((n, max_new), -1, np.int32)
-        self.len = np.zeros((n,), np.int64)
+def _decode_loop(params, cfg: ModelConfig, kcfg: KappaConfig,
+                 prompt: np.ndarray, rng,
+                 strategy: strategies.DecodeStrategy, *, eos_id: int,
+                 bos_id: int = 0, max_seq: Optional[int] = None,
+                 frontend=None) -> GenResult:
+    """Drive one request to completion with a dedicated branch cache."""
+    n_prefix = _n_prefix(cfg)
+    max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens + n_prefix)
 
-    def append(self, branch_ids: np.ndarray, tokens: np.ndarray,
-               active: np.ndarray):
-        for row, b in enumerate(branch_ids):
-            if active[row]:
-                self.buf[b, self.len[b]] = tokens[row]
-                self.len[b] += 1
+    pf_logits, cache = _prefill_one(params, cfg, prompt, max_seq, frontend)
+    rs = strategies.RequestState(
+        strategy, params, cfg, kcfg, len(prompt), rng, eos_id=eos_id,
+        bos_id=bos_id, max_seq=max_seq, n_prefix=n_prefix, frontend=frontend)
+    if rs.n > 1:
+        cache = cache_lib.broadcast_batch(cache, rs.n)
+    rs.first_tokens(pf_logits)
+
+    while not rs.finished:
+        logits, cache = _model_step(params, cfg, jnp.asarray(rs.cur),
+                                    jnp.int32(rs.pos), cache)
+        dec = rs.advance(logits)
+        if dec.keep is not None:
+            cache = cache_lib.gather_batch(cache, jnp.asarray(dec.keep))
+    return rs.result()
 
 
-# ------------------------------------------------------------------ KAPPA
+# --------------------------------------------------------- public methods
 
 def generate_kappa(params, cfg: ModelConfig, kcfg: KappaConfig,
                    prompt: np.ndarray, rng, *, eos_id: int, bos_id: int = 0,
                    max_seq: Optional[int] = None, frontend=None) -> GenResult:
-    n = kcfg.num_branches
-    max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens
-                          + (cfg.frontend_tokens if cfg.frontend and not cfg.is_encoder_decoder else 0))
-    n_prefix = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
+    return _decode_loop(params, cfg, kcfg, prompt, rng,
+                        strategies.KappaStrategy(), eos_id=eos_id,
+                        bos_id=bos_id, max_seq=max_seq, frontend=frontend)
 
-    log_q = _bos_log_q(params, cfg, jnp.int32(bos_id),
-                       frontend[:1] if frontend is not None else None)
-    pf_logits, cache1 = _prefill_one(params, cfg, prompt, max_seq, frontend)
-    cache = cache_lib.broadcast_batch(cache1, n)
-    state = kappa_lib.init_state(kcfg)
-
-    rng, k0 = jax.random.split(rng)
-    cur = _sample_step(k0, jnp.broadcast_to(pf_logits, (n, pf_logits.shape[-1])), kcfg)
-
-    log = _TokenLog(n, kcfg.max_new_tokens + 1)
-    branch_ids = np.arange(n)
-    done = np.zeros((n,), bool)
-    alive_rows = n
-    logical = compute = 0
-    peak = cache_lib.used_cache_bytes(cfg, n, len(prompt) + n_prefix, max_seq)
-    chain = cache_lib.bucket_chain(n)
-    compactions: List[int] = []
-
-    cur_np = np.asarray(cur)
-    log.append(branch_ids, cur_np, ~done)
-    logical += int(np.sum(~done))
-    compute += alive_rows
-
-    pos = len(prompt) + n_prefix
-    step = 0
-    controller_step = jax.jit(kappa_lib.kappa_step, static_argnums=(4,))
-
-    while step < kcfg.max_new_tokens - 1:
-        logits, cache = _model_step(params, cfg, jnp.asarray(cur), jnp.int32(pos), cache)
-        state = controller_step(state, logits, jnp.asarray(cur), log_q, kcfg)
-
-        rng, kk = jax.random.split(rng)
-        nxt = _sample_step(kk, logits, kcfg)
-        nxt_np = np.asarray(nxt)
-        nxt_np = np.where(done[branch_ids], eos_id, nxt_np)
-        done[branch_ids] |= (nxt_np == eos_id)
-
-        alive_mask = np.asarray(state.alive)
-        active = alive_mask & ~done[branch_ids]
-        log.append(branch_ids, nxt_np, active)
-        logical += int(np.sum(active))
-        compute += len(branch_ids)
-
-        pos += 1
-        step += 1
-        cur = jnp.asarray(nxt_np)
-
-        # --- bucketed compaction
-        n_alive = int(np.sum(alive_mask))
-        if kcfg.compaction:
-            bucket = cache_lib.next_bucket(chain, max(n_alive, 1), len(branch_ids))
-            if bucket < len(branch_ids):
-                traj = np.asarray(state.traj)
-                order = np.argsort(~alive_mask * 1_000_000 - traj)  # alive best first
-                keep = np.sort(order[:bucket])
-                cache = cache_lib.gather_batch(cache, jnp.asarray(keep))
-                state = kappa_lib.compact_state(state, jnp.asarray(keep))
-                branch_ids = branch_ids[keep]
-                cur = cur[jnp.asarray(keep)]
-                compactions.append(bucket)
-        peak = max(peak, cache_lib.used_cache_bytes(cfg, len(branch_ids), pos, max_seq))
-
-        # --- termination: sole survivor finished, or everyone done
-        alive_mask = np.asarray(state.alive)
-        live_branches = branch_ids[alive_mask]
-        if len(live_branches) == 1 and done[live_branches[0]]:
-            break
-        if np.all(done[branch_ids] | ~alive_mask):
-            break
-
-    traj = np.asarray(state.traj)
-    alive_mask = np.asarray(state.alive)
-    masked = np.where(alive_mask, traj, -np.inf)
-    winner_row = int(np.argmax(masked))
-    chosen = int(branch_ids[winner_row])
-    toks = log.buf[chosen, :log.len[chosen]]
-    toks = toks[toks != -1].tolist()
-    return GenResult(
-        tokens=toks, chosen_branch=chosen, all_tokens=log.buf,
-        lengths=log.len.copy(), logical_tokens=logical,
-        compute_tokens=compute, peak_cache_bytes=peak, steps=step,
-        compactions=compactions,
-        extra={"cutoff": int(np.asarray(state.cutoff)),
-               "traj": traj.tolist()})
-
-
-def done_rows(done: np.ndarray, branch_ids: np.ndarray) -> np.ndarray:
-    return done[branch_ids]
-
-
-# ------------------------------------------------------------------ greedy
 
 def generate_greedy(params, cfg: ModelConfig, kcfg: KappaConfig,
                     prompt: np.ndarray, rng, *, eos_id: int, bos_id: int = 0,
                     max_seq: Optional[int] = None, frontend=None) -> GenResult:
-    max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens
-                          + (cfg.frontend_tokens if cfg.frontend and not cfg.is_encoder_decoder else 0))
-    n_prefix = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
-    pf_logits, cache = _prefill_one(params, cfg, prompt, max_seq, frontend)
-    cur = sampler.greedy(pf_logits[None])
-    toks = [int(cur[0])]
-    pos = len(prompt) + n_prefix
-    peak = cache_lib.used_cache_bytes(cfg, 1, pos, max_seq)
-    step = 0
-    while toks[-1] != eos_id and step < kcfg.max_new_tokens - 1:
-        logits, cache = _model_step(params, cfg, cur, jnp.int32(pos), cache)
-        cur = sampler.greedy(logits)
-        toks.append(int(cur[0]))
-        pos += 1
-        step += 1
-        peak = max(peak, cache_lib.used_cache_bytes(cfg, 1, pos, max_seq))
-    if toks and toks[-1] == eos_id:
-        toks = toks[:-1] + [eos_id]
-    buf = np.full((1, kcfg.max_new_tokens + 1), -1, np.int32)
-    buf[0, :len(toks)] = toks
-    return GenResult(tokens=toks, chosen_branch=0, all_tokens=buf,
-                     lengths=np.array([len(toks)]), logical_tokens=len(toks),
-                     compute_tokens=len(toks), peak_cache_bytes=peak,
-                     steps=step)
+    return _decode_loop(params, cfg, kcfg, prompt, rng,
+                        strategies.GreedyStrategy(), eos_id=eos_id,
+                        bos_id=bos_id, max_seq=max_seq, frontend=frontend)
 
-
-# --------------------------------------------------------------------- BoN
 
 def generate_bon(params, cfg: ModelConfig, kcfg: KappaConfig,
                  prompt: np.ndarray, rng, *, eos_id: int, bos_id: int = 0,
                  max_seq: Optional[int] = None, frontend=None) -> GenResult:
-    """Full Best-of-N with negative-perplexity selection (Kang et al. 2025)."""
-    n = kcfg.num_branches
-    max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens
-                          + (cfg.frontend_tokens if cfg.frontend and not cfg.is_encoder_decoder else 0))
-    n_prefix = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
-    pf_logits, cache1 = _prefill_one(params, cfg, prompt, max_seq, frontend)
-    cache = cache_lib.broadcast_batch(cache1, n)
+    return _decode_loop(params, cfg, kcfg, prompt, rng,
+                        strategies.BoNStrategy(), eos_id=eos_id,
+                        bos_id=bos_id, max_seq=max_seq, frontend=frontend)
 
-    rng, k0 = jax.random.split(rng)
-    logits = jnp.broadcast_to(pf_logits, (n, pf_logits.shape[-1]))
-    cur = _sample_step(k0, logits, kcfg)
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    sum_lp = np.asarray(jnp.take_along_axis(lp, cur[:, None], axis=-1)[:, 0], np.float64)
-    count = np.ones((n,), np.int64)
-
-    log = _TokenLog(n, kcfg.max_new_tokens + 1)
-    branch_ids = np.arange(n)
-    done = np.zeros((n,), bool)
-    cur_np = np.asarray(cur)
-    log.append(branch_ids, cur_np, ~done)
-    logical = int(np.sum(~done))
-    compute = n
-    peak = cache_lib.used_cache_bytes(cfg, n, len(prompt) + n_prefix, max_seq)
-
-    pos = len(prompt) + n_prefix
-    step = 0
-    while step < kcfg.max_new_tokens - 1 and not np.all(done):
-        logits, cache = _model_step(params, cfg, jnp.asarray(cur_np), jnp.int32(pos), cache)
-        rng, kk = jax.random.split(rng)
-        nxt = _sample_step(kk, logits, kcfg)
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        step_lp = np.asarray(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0], np.float64)
-        nxt_np = np.asarray(nxt)
-        nxt_np = np.where(done, eos_id, nxt_np)
-        newly = ~done
-        sum_lp += np.where(newly, step_lp, 0.0)
-        count += newly
-        done |= (nxt_np == eos_id)
-        log.append(branch_ids, nxt_np, newly)
-        logical += int(np.sum(newly))
-        compute += n
-        cur_np = nxt_np
-        pos += 1
-        step += 1
-        peak = max(peak, cache_lib.used_cache_bytes(cfg, n, pos, max_seq))
-
-    neg_ppl = sum_lp / np.maximum(count, 1)  # mean log-prob = −log(perplexity)
-    chosen = int(np.argmax(neg_ppl))
-    toks = log.buf[chosen, :log.len[chosen]]
-    toks = toks[toks != -1].tolist()
-    return GenResult(tokens=toks, chosen_branch=chosen, all_tokens=log.buf,
-                     lengths=log.len.copy(), logical_tokens=logical,
-                     compute_tokens=compute, peak_cache_bytes=peak, steps=step,
-                     extra={"neg_ppl": neg_ppl.tolist()})
-
-
-# ------------------------------------------------------------------ ST-BoN
 
 def generate_stbon(params, cfg: ModelConfig, kcfg: KappaConfig,
                    prompt: np.ndarray, rng, *, eos_id: int, bos_id: int = 0,
                    buffer_window: int = 16, max_seq: Optional[int] = None,
                    frontend=None) -> GenResult:
-    """Self-Truncation BoN (Wang et al. 2025): decode until the earliest
-    point of pairwise difference + a fixed buffer window, then keep the
-    branch most consistent with the others and truncate the rest.
-
-    Consistency here = mean pairwise cosine similarity of the branches'
-    buffer-window-averaged next-token distributions (the paper uses
-    latent-embedding consistency; distribution-space consistency is the
-    closest signal our engine already materializes — noted in DESIGN.md).
-    """
-    n = kcfg.num_branches
-    max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens
-                          + (cfg.frontend_tokens if cfg.frontend and not cfg.is_encoder_decoder else 0))
-    n_prefix = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
-    pf_logits, cache1 = _prefill_one(params, cfg, prompt, max_seq, frontend)
-    cache = cache_lib.broadcast_batch(cache1, n)
-
-    rng, k0 = jax.random.split(rng)
-    cur = _sample_step(k0, jnp.broadcast_to(pf_logits, (n, pf_logits.shape[-1])), kcfg)
-    cur_np = np.asarray(cur)
-
-    log = _TokenLog(n, kcfg.max_new_tokens + 1)
-    branch_ids = np.arange(n)
-    done = np.zeros((n,), bool)
-    log.append(branch_ids, cur_np, ~done)
-    logical = int(np.sum(~done))
-    compute = n
-    peak = cache_lib.used_cache_bytes(cfg, n, len(prompt) + n_prefix, max_seq)
-
-    diverged = np.eye(n, dtype=bool)
-    cutoff_hit_step = None
-    prob_acc = np.zeros((n, cfg.vocab_size), np.float64)
-    prob_cnt = 0
-    truncated = False
-    chosen = 0
-    compactions: List[int] = []
-
-    pos = len(prompt) + n_prefix
-    step = 0
-    while step < kcfg.max_new_tokens - 1:
-        logits, cache = _model_step(params, cfg, jnp.asarray(cur_np), jnp.int32(pos), cache)
-        rng, kk = jax.random.split(rng)
-        nxt = _sample_step(kk, logits, kcfg)
-        nxt_np = np.asarray(nxt)
-        nxt_np = np.where(done[branch_ids], eos_id, nxt_np)
-        done[branch_ids] |= (nxt_np == eos_id)
-        active = ~done[branch_ids] if truncated else ~done[branch_ids]
-        log.append(branch_ids, nxt_np, active)
-        logical += int(np.sum(active))
-        compute += len(branch_ids)
-        pos += 1
-        step += 1
-        cur_np = nxt_np
-
-        if not truncated:
-            diverged |= cur_np[:, None] != cur_np[None, :]
-            if cutoff_hit_step is None and (np.all(diverged) or step >= kcfg.max_cutoff):
-                cutoff_hit_step = step
-            if cutoff_hit_step is not None:
-                probs = np.asarray(jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
-                                   np.float64)
-                prob_acc += probs
-                prob_cnt += 1
-                if step >= cutoff_hit_step + buffer_window:
-                    mean_p = prob_acc / max(prob_cnt, 1)
-                    norm = np.linalg.norm(mean_p, axis=-1, keepdims=True)
-                    unit = mean_p / np.maximum(norm, 1e-12)
-                    sim = unit @ unit.T
-                    consistency = (sim.sum(-1) - 1.0) / max(n - 1, 1)
-                    chosen_row = int(np.argmax(consistency))
-                    chosen = int(branch_ids[chosen_row])
-                    keep = jnp.asarray([chosen_row])
-                    cache = cache_lib.gather_batch(cache, keep)
-                    branch_ids = branch_ids[[chosen_row]]
-                    cur_np = cur_np[[chosen_row]]
-                    truncated = True
-                    compactions.append(1)
-        peak = max(peak, cache_lib.used_cache_bytes(cfg, len(branch_ids), pos, max_seq))
-        if truncated and done[branch_ids[0]]:
-            break
-        if np.all(done[branch_ids]):
-            break
-
-    if not truncated:
-        chosen = int(branch_ids[0])
-    toks = log.buf[chosen, :log.len[chosen]]
-    toks = toks[toks != -1].tolist()
-    return GenResult(tokens=toks, chosen_branch=chosen, all_tokens=log.buf,
-                     lengths=log.len.copy(), logical_tokens=logical,
-                     compute_tokens=compute, peak_cache_bytes=peak, steps=step,
-                     compactions=compactions,
-                     extra={"cutoff": cutoff_hit_step})
+    return _decode_loop(params, cfg, kcfg, prompt, rng,
+                        strategies.STBoNStrategy(buffer_window=buffer_window),
+                        eos_id=eos_id, bos_id=bos_id, max_seq=max_seq,
+                        frontend=frontend)
 
 
 # ------------------------------------------------------- dry-run target

@@ -29,3 +29,15 @@ def sample(rng, logits, *, temperature: float = 0.7, top_k: int = 20,
 
 def greedy(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+_argmax = greedy
+
+
+def sample_step(rng, logits, kcfg, *, greedy: bool = False):
+    """One sampling step under a KappaConfig's sampling hyperparameters.
+    ``greedy=True`` forces argmax (the greedy strategy's row)."""
+    if greedy:
+        return _argmax(logits)
+    return sample(rng, logits, temperature=kcfg.temperature,
+                  top_k=kcfg.top_k, top_p=kcfg.top_p)

@@ -1,0 +1,227 @@
+"""Continuous-batching multi-request scheduler (DESIGN.md §4).
+
+The sequential engine serves one prompt at a time: N branch rows, pruned
+to 1 by KAPPA/ST-BoN, then a long single-row tail to EOS — poor device
+utilization exactly when pruning succeeds. This scheduler turns freed
+rows into throughput, the serving-level payoff the early-pruning papers
+point at (ST-BoN, Wang et al. 2025; Bi et al. 2025):
+
+  * a fixed ``(rows, max_seq)`` device cache pool allocated once — one
+    compiled decode shape, no per-request recompilation;
+  * a FIFO request queue; a request is admitted when its branch fan-out
+    fits in the free slots (prefill at batch 1, broadcast to N rows,
+    scattered into the slots);
+  * one fused decode step per tick over the *whole* pool with per-row
+    positions (rows of different requests sit at different offsets);
+  * per-request strategies (repro.serving.strategies) drive sampling,
+    controller updates and pruning on their own row groups; compaction
+    frees slots which are immediately backfilled by queued prefills;
+  * per-request ``GenResult``s emitted on completion with the same
+    accounting as sequential serving.
+
+Equivalence guarantee: the batched decode step is row-independent, the
+host-side per-request logic is shared verbatim with the engine loop, and
+each request consumes its own RNG stream — so with the same per-request
+keys and the same ``max_seq`` the scheduler reproduces the sequential
+engine token for token (tests/test_scheduler.py).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import KappaConfig, ModelConfig
+from repro.models import init_cache
+from repro.serving import cache as cache_lib
+from repro.serving import engine
+from repro.serving import strategies
+from repro.serving.strategies import GenResult
+
+_scatter = jax.jit(cache_lib.scatter_batch, donate_argnums=(0,))
+
+
+class ContinuousBatchingScheduler:
+    """Admit prompts into a fixed row pool and decode them concurrently.
+
+    Parameters
+    ----------
+    rows : total branch slots in the device pool. Must be >= the fan-out
+        of a single request (``strategy.rows(kcfg)``).
+    max_seq : shared sequence capacity of every pool row. Each admitted
+        prompt must satisfy ``len(prompt) + n_prefix + max_new <= max_seq``.
+    method : one of "greedy" | "bon" | "stbon" | "kappa"; or pass
+        ``strategy_factory`` for custom construction (e.g. ST-BoN with a
+        non-default buffer window).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
+                 rows: int, max_seq: int, method: str = "kappa",
+                 eos_id: int, bos_id: int = 0, frontend=None,
+                 strategy_factory: Optional[Callable[[], strategies.DecodeStrategy]] = None):
+        self.params = params
+        self.cfg = cfg
+        self.kcfg = kcfg
+        self.rows = rows
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.bos_id = bos_id
+        self.frontend = frontend
+        self.strategy_factory = strategy_factory or (
+            lambda: strategies.make_strategy(method))
+        self.n_prefix = engine._n_prefix(cfg)
+
+        need = self.strategy_factory().rows(kcfg)
+        if rows < need:
+            raise ValueError(f"pool rows={rows} < request fan-out {need}")
+        if cfg.is_moe and cfg.moe_capacity_factor > 0:
+            # capacity-limited MoE routing drops tokens *per batch*, so
+            # pool rows are not independent: one request's rows (and the
+            # free rows' garbage tokens) would contend for expert capacity
+            # with another's, breaking the equivalence guarantee. Dropless
+            # routing (capacity_factor <= 0) is exact and row-independent.
+            raise ValueError(
+                "continuous batching requires dropless MoE routing "
+                "(cfg.moe_capacity_factor <= 0): capacity-limited dispatch "
+                "couples pool rows across requests")
+
+        self.pool = init_cache(cfg, rows, max_seq)
+        self.row_token = np.zeros((rows,), np.int32)
+        self.row_pos = np.zeros((rows,), np.int32)
+        self.free: List[int] = list(range(rows))
+        self.queue: deque = deque()          # (rid, prompt, rng)
+        self.active: Dict[int, tuple] = {}   # rid -> (RequestState, slots)
+        self.results: Dict[int, GenResult] = {}
+        self._next_rid = 0
+        self.ticks = 0
+        self._occupied_ticks = 0             # Σ occupied rows over ticks
+
+    # ------------------------------------------------------------ submit
+
+    def submit(self, prompt: np.ndarray, rng) -> int:
+        """Queue one prompt with its own RNG stream; returns request id."""
+        need = len(prompt) + self.n_prefix + self.kcfg.max_new_tokens
+        if need > self.max_seq:
+            raise ValueError(
+                f"prompt needs {need} positions > pool max_seq={self.max_seq}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append((rid, np.asarray(prompt), rng))
+        return rid
+
+    # --------------------------------------------------------- admission
+
+    def _try_admit(self) -> bool:
+        """Admit the queue head if its fan-out fits the free slots
+        (FIFO — no head-of-line bypass, keeping completion order fair)."""
+        if not self.queue:
+            return False
+        rid, prompt, rng = self.queue[0]
+        strategy = self.strategy_factory()
+        n = strategy.rows(self.kcfg)
+        if len(self.free) < n:
+            return False
+        self.queue.popleft()
+        slots = sorted(self.free[:n])
+        del self.free[:n]
+
+        pf_logits, cache1 = engine._prefill_one(
+            self.params, self.cfg, prompt, self.max_seq, self.frontend)
+        rs = strategies.RequestState(
+            strategy, self.params, self.cfg, self.kcfg, len(prompt), rng,
+            eos_id=self.eos_id, bos_id=self.bos_id, max_seq=self.max_seq,
+            n_prefix=self.n_prefix, frontend=self.frontend)
+        sub = cache_lib.broadcast_batch(cache1, n) if n > 1 else cache1
+        self.pool = _scatter(self.pool, jnp.asarray(slots), sub)
+        rs.first_tokens(pf_logits)
+        if rs.finished:  # e.g. greedy whose first token is already EOS
+            self.results[rid] = rs.result()
+            self._release(slots)
+        else:
+            self.active[rid] = (rs, slots)
+            self.row_token[slots] = rs.cur
+            self.row_pos[slots] = rs.pos
+        return True
+
+    def _release(self, slots: List[int]) -> None:
+        self.row_token[slots] = 0
+        self.row_pos[slots] = 0
+        self.free.extend(slots)
+        self.free.sort()
+
+    # -------------------------------------------------------------- tick
+
+    def tick(self) -> None:
+        """Admit what fits, then run one fused decode step over the pool
+        and advance every active request on its own rows."""
+        while self._try_admit():
+            pass
+        if not self.active:
+            return
+        self._occupied_ticks += self.rows - len(self.free)
+
+        logits, self.pool = engine._model_step(
+            self.params, self.cfg, jnp.asarray(self.row_token),
+            jnp.asarray(self.row_pos), self.pool)
+
+        for rid in list(self.active):
+            rs, slots = self.active[rid]
+            dec = rs.advance(logits[jnp.asarray(slots)])
+            if dec.keep is not None:
+                kept = [slots[i] for i in dec.keep]
+                self._release(sorted(set(slots) - set(kept)))
+                slots = kept
+                self.active[rid] = (rs, slots)
+            self.row_token[slots] = rs.cur
+            self.row_pos[slots] = rs.pos
+            if rs.finished:
+                self.results[rid] = rs.result()
+                del self.active[rid]
+                self._release(slots)
+        self.ticks += 1
+
+    # --------------------------------------------------------------- run
+
+    def run(self) -> Dict[int, GenResult]:
+        """Drive queue + pool to completion; returns rid -> GenResult."""
+        t0 = time.time()
+        while self.queue or self.active:
+            before = (len(self.queue), len(self.active))
+            self.tick()
+            if not self.active and self.queue and \
+                    (len(self.queue), len(self.active)) == before:
+                raise RuntimeError(
+                    "scheduler stalled: queued request cannot be admitted "
+                    f"(free={len(self.free)} rows)")
+        self.elapsed = time.time() - t0
+        return dict(sorted(self.results.items()))
+
+    # ----------------------------------------------------------- metrics
+
+    def request_bytes(self) -> Dict[int, int]:
+        """Per-request paged-view bytes currently referenced in the pool."""
+        return cache_lib.per_request_bytes(
+            self.cfg, {rid: (len(slots), rs.pos)
+                       for rid, (rs, slots) in self.active.items()},
+            self.max_seq)
+
+    def throughput(self) -> Dict[str, float]:
+        """Aggregate serving metrics over a completed ``run()``."""
+        total_logical = sum(r.logical_tokens for r in self.results.values())
+        total_compute = sum(r.compute_tokens for r in self.results.values())
+        elapsed = max(getattr(self, "elapsed", 0.0), 1e-9)
+        return {
+            "requests": len(self.results),
+            "ticks": self.ticks,
+            "time_s": elapsed,
+            "logical_tokens": total_logical,
+            "compute_tokens": total_compute,
+            "tokens_per_s": total_logical / elapsed,
+            "requests_per_s": len(self.results) / elapsed,
+            "row_utilization": (self._occupied_ticks
+                                / max(self.ticks * self.rows, 1)),
+        }

@@ -1,0 +1,385 @@
+"""Decode strategies: each method's per-step controller state and
+selection rule behind one uniform interface (DESIGN.md §3).
+
+A ``DecodeStrategy`` owns everything method-specific — KAPPA's jitted
+controller state, BoN's running log-probabilities, ST-BoN's divergence
+tracking — while ``RequestState`` holds the method-agnostic host state of
+one in-flight request (token log, done mask, RNG stream, byte/token
+accounting). The same two classes drive both execution modes:
+
+  * the single-request loop in ``repro.serving.engine`` (one model step
+    per request per iteration, cache gathered on compaction), and
+  * the continuous-batching scheduler in ``repro.serving.scheduler``
+    (one fused model step over a fixed row pool, rows freed on prune).
+
+Because every host-side decision (sampling keys, masking, compaction
+order, termination) lives here and is shared verbatim, the scheduler is
+token-for-token equivalent to sequential serving given the same
+per-request RNG keys and ``max_seq``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import KappaConfig, ModelConfig
+from repro.core import kappa as kappa_lib
+from repro.core.signals import reference_log_q
+from repro.models import train_logits
+from repro.serving import cache as cache_lib
+from repro.serving import sampler
+
+
+@dataclass
+class GenResult:
+    tokens: List[int]                 # generated tokens of the chosen branch
+    chosen_branch: int                # original branch index
+    all_tokens: np.ndarray            # (N, T) all branch tokens (-1 pad)
+    lengths: np.ndarray               # (N,) live lengths
+    logical_tokens: int               # paper-style token count
+    compute_tokens: int               # TPU rows actually decoded
+    peak_cache_bytes: int             # branch-scaling memory peak
+    steps: int
+    compactions: List[int] = field(default_factory=list)
+    extra: Dict = field(default_factory=dict)
+
+
+@dataclass
+class StepDecision:
+    """What a strategy decided after observing one decode step."""
+    counted: np.ndarray               # (rows,) bool — log + logical accounting
+    keep: Optional[np.ndarray] = None  # sorted row indices to compact to
+    stop: bool = False                # request finished
+
+
+class TokenLog:
+    """Host-side per-branch token buffers surviving compaction."""
+
+    def __init__(self, n: int, max_new: int):
+        self.buf = np.full((n, max_new), -1, np.int32)
+        self.len = np.zeros((n,), np.int64)
+
+    def append(self, branch_ids: np.ndarray, tokens: np.ndarray,
+               active: np.ndarray):
+        for row, b in enumerate(branch_ids):
+            if active[row]:
+                self.buf[b, self.len[b]] = tokens[row]
+                self.len[b] += 1
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _bos_log_q(params, cfg: ModelConfig, bos_token, frontend=None):
+    """Unconditional reference logits q from the BOS-only context
+    (Alg. 2 line 9)."""
+    logits, _ = train_logits(params, cfg, bos_token[None, None], frontend)
+    return reference_log_q(logits[0, -1])
+
+
+_kappa_controller = jax.jit(kappa_lib.kappa_step, static_argnums=(4,))
+
+
+# ------------------------------------------------------------- strategies
+
+class DecodeStrategy:
+    """Per-method controller. Subclasses hold all method-specific state;
+    the driving loop only sees rows/begin/step/choose."""
+
+    name = "base"
+    greedy = False  # argmax sampling instead of temperature sampling
+
+    def rows(self, kcfg: KappaConfig) -> int:
+        return kcfg.num_branches
+
+    def begin(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
+              bos_id: int, frontend=None) -> None:
+        self.kcfg = kcfg
+
+    def init_done(self, tokens0: np.ndarray, eos_id: int) -> np.ndarray:
+        return np.zeros(tokens0.shape, bool)
+
+    def observe_prefill(self, logits0, tokens0: np.ndarray) -> None:
+        pass
+
+    def step(self, logits, in_tokens: np.ndarray, out_tokens: np.ndarray,
+             branch_ids: np.ndarray, done: np.ndarray,
+             done_prev: np.ndarray, step_idx: int) -> StepDecision:
+        raise NotImplementedError
+
+    def choose(self, branch_ids: np.ndarray, done: np.ndarray) -> int:
+        return int(branch_ids[0])
+
+    def extra(self) -> Dict:
+        return {}
+
+
+class GreedyStrategy(DecodeStrategy):
+    """Single deterministic branch decoded to EOS."""
+
+    name = "greedy"
+    greedy = True
+
+    def rows(self, kcfg: KappaConfig) -> int:
+        return 1
+
+    def init_done(self, tokens0, eos_id):
+        return tokens0 == eos_id
+
+    def step(self, logits, in_tokens, out_tokens, branch_ids, done,
+             done_prev, step_idx):
+        # the EOS token itself is logged/counted (emitted before done)
+        return StepDecision(counted=~done_prev,
+                            stop=bool(done[branch_ids[0]]))
+
+
+class BoNStrategy(DecodeStrategy):
+    """Full Best-of-N with negative-perplexity selection (Kang et al.
+    2025): every branch decodes to EOS, keep the most likely one."""
+
+    name = "bon"
+
+    def begin(self, params, cfg, kcfg, *, bos_id, frontend=None):
+        super().begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
+        n = kcfg.num_branches
+        self.sum_lp = np.zeros((n,), np.float64)
+        self.count = np.zeros((n,), np.int64)
+
+    def observe_prefill(self, logits0, tokens0):
+        lp = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(lp, jnp.asarray(tokens0)[:, None], axis=-1)
+        self.sum_lp += np.asarray(picked[:, 0], np.float64)
+        self.count += 1
+
+    def step(self, logits, in_tokens, out_tokens, branch_ids, done,
+             done_prev, step_idx):
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        picked = jnp.take_along_axis(lp, jnp.asarray(out_tokens)[:, None], axis=-1)
+        step_lp = np.asarray(picked[:, 0], np.float64)
+        newly = ~done_prev  # a branch's own EOS step still counts toward ppl
+        self.sum_lp += np.where(newly, step_lp, 0.0)
+        self.count += newly
+        return StepDecision(counted=newly, stop=bool(np.all(done)))
+
+    def choose(self, branch_ids, done):
+        return int(np.argmax(self._neg_ppl()))
+
+    def _neg_ppl(self):
+        return self.sum_lp / np.maximum(self.count, 1)
+
+    def extra(self):
+        return {"neg_ppl": self._neg_ppl().tolist()}
+
+
+class STBoNStrategy(DecodeStrategy):
+    """Self-Truncation BoN (Wang et al. 2025): decode until the earliest
+    point of pairwise difference + a fixed buffer window, then keep the
+    branch most consistent with the others and truncate the rest.
+
+    Consistency here = mean pairwise cosine similarity of the branches'
+    buffer-window-averaged next-token distributions (the paper uses
+    latent-embedding consistency; distribution-space consistency is the
+    closest signal our engine already materializes — noted in DESIGN.md).
+    """
+
+    name = "stbon"
+
+    def __init__(self, buffer_window: int = 16):
+        self.buffer_window = buffer_window
+
+    def begin(self, params, cfg, kcfg, *, bos_id, frontend=None):
+        super().begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
+        n = kcfg.num_branches
+        self.diverged = np.eye(n, dtype=bool)
+        self.cutoff_hit: Optional[int] = None
+        self.prob_acc = np.zeros((n, cfg.vocab_size), np.float64)
+        self.prob_cnt = 0
+        self.truncated = False
+
+    def step(self, logits, in_tokens, out_tokens, branch_ids, done,
+             done_prev, step_idx):
+        kcfg = self.kcfg
+        n = kcfg.num_branches
+        keep = None
+        if not self.truncated:
+            self.diverged |= out_tokens[:, None] != out_tokens[None, :]
+            if self.cutoff_hit is None and (np.all(self.diverged)
+                                            or step_idx >= kcfg.max_cutoff):
+                self.cutoff_hit = step_idx
+            if self.cutoff_hit is not None:
+                probs = np.asarray(
+                    jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
+                    np.float64)
+                self.prob_acc += probs
+                self.prob_cnt += 1
+                if step_idx >= self.cutoff_hit + self.buffer_window:
+                    mean_p = self.prob_acc / max(self.prob_cnt, 1)
+                    norm = np.linalg.norm(mean_p, axis=-1, keepdims=True)
+                    unit = mean_p / np.maximum(norm, 1e-12)
+                    sim = unit @ unit.T
+                    consistency = (sim.sum(-1) - 1.0) / max(n - 1, 1)
+                    keep = np.array([int(np.argmax(consistency))])
+                    self.truncated = True
+        bids = branch_ids if keep is None else branch_ids[keep]
+        stop = (self.truncated and bool(done[bids[0]])) or bool(np.all(done[bids]))
+        return StepDecision(counted=~done[branch_ids], keep=keep, stop=stop)
+
+    def extra(self):
+        return {"cutoff": self.cutoff_hit}
+
+
+class KappaStrategy(DecodeStrategy):
+    """The paper's KAPPA controller: latent-informativeness scoring with
+    scheduled pruning and bucketed cache compaction (DESIGN.md §2)."""
+
+    name = "kappa"
+
+    def begin(self, params, cfg, kcfg, *, bos_id, frontend=None):
+        super().begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
+        self.log_q = _bos_log_q(params, cfg, jnp.int32(bos_id),
+                                frontend[:1] if frontend is not None else None)
+        self.state = kappa_lib.init_state(kcfg)
+        self.chain = cache_lib.bucket_chain(kcfg.num_branches)
+
+    def step(self, logits, in_tokens, out_tokens, branch_ids, done,
+             done_prev, step_idx):
+        kcfg = self.kcfg
+        self.state = _kappa_controller(self.state, logits,
+                                       jnp.asarray(in_tokens), self.log_q, kcfg)
+        alive = np.asarray(self.state.alive)
+        counted = alive & ~done[branch_ids]
+
+        keep = None
+        rows = len(branch_ids)
+        if kcfg.compaction:
+            n_alive = int(np.sum(alive))
+            bucket = cache_lib.next_bucket(self.chain, max(n_alive, 1), rows)
+            if bucket < rows:
+                traj = np.asarray(self.state.traj)
+                order = np.argsort(~alive * 1_000_000 - traj)  # alive best first
+                keep = np.sort(order[:bucket])
+                self.state = kappa_lib.compact_state(self.state, jnp.asarray(keep))
+
+        # termination on the post-compaction view
+        alive2 = np.asarray(self.state.alive)
+        bids = branch_ids if keep is None else branch_ids[keep]
+        live = bids[alive2]
+        stop = (len(live) == 1 and bool(done[live[0]])) \
+            or bool(np.all(done[bids] | ~alive2))
+        return StepDecision(counted=counted, keep=keep, stop=stop)
+
+    def choose(self, branch_ids, done):
+        traj = np.asarray(self.state.traj)
+        alive = np.asarray(self.state.alive)
+        masked = np.where(alive, traj, -np.inf)
+        return int(branch_ids[int(np.argmax(masked))])
+
+    def extra(self):
+        return {"cutoff": int(np.asarray(self.state.cutoff)),
+                "traj": np.asarray(self.state.traj).tolist()}
+
+
+_STRATEGIES = {
+    "greedy": GreedyStrategy,
+    "bon": BoNStrategy,
+    "stbon": STBoNStrategy,
+    "kappa": KappaStrategy,
+}
+
+
+def make_strategy(name: str, **kw) -> DecodeStrategy:
+    return _STRATEGIES[name](**kw)
+
+
+# ----------------------------------------------------------- request state
+
+class RequestState:
+    """Method-agnostic host state of one in-flight request.
+
+    Owns the RNG stream, the done mask, the token log, and the
+    logical/compute/byte accounting. The driver (engine loop or
+    scheduler) owns the device cache; it applies ``StepDecision.keep``
+    to its own row storage (gather for a dedicated cache, slot freeing
+    for the shared pool)."""
+
+    def __init__(self, strategy: DecodeStrategy, params, cfg: ModelConfig,
+                 kcfg: KappaConfig, prompt_len: int, rng, *, eos_id: int,
+                 bos_id: int, max_seq: int, n_prefix: int, frontend=None):
+        self.strategy = strategy
+        self.cfg = cfg
+        self.kcfg = kcfg
+        self.eos_id = eos_id
+        self.max_seq = max_seq
+        self.rng = rng
+        strategy.begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
+        self.n = strategy.rows(kcfg)
+        self.log = TokenLog(self.n, kcfg.max_new_tokens + 1)
+        self.branch_ids = np.arange(self.n)
+        self.pos = prompt_len + n_prefix
+        self.step = 0
+        self.logical = 0
+        self.compute = 0
+        self.compactions: List[int] = []
+        self.peak = cache_lib.used_cache_bytes(cfg, self.n, self.pos, max_seq)
+        self.done: Optional[np.ndarray] = None
+        self.cur: Optional[np.ndarray] = None
+        self.finished = False
+
+    def first_tokens(self, pf_logits) -> np.ndarray:
+        """Sample the fan-out tokens from the prefill logits."""
+        self.rng, k0 = jax.random.split(self.rng)
+        logits0 = jnp.broadcast_to(pf_logits, (self.n, pf_logits.shape[-1]))
+        cur = sampler.sample_step(k0, logits0, self.kcfg,
+                                  greedy=self.strategy.greedy)
+        self.cur = np.asarray(cur)
+        self.done = self.strategy.init_done(self.cur, self.eos_id)
+        self.strategy.observe_prefill(logits0, self.cur)
+        self.log.append(self.branch_ids, self.cur, np.ones(self.n, bool))
+        self.logical += self.n
+        self.compute += self.n
+        if np.all(self.done) or self.kcfg.max_new_tokens <= 1:
+            self.finished = True
+        return self.cur
+
+    def advance(self, logits) -> StepDecision:
+        """Host-side work for one decode step given this request's
+        per-branch logits. The caller must apply ``decision.keep`` to
+        its cache rows."""
+        self.rng, kk = jax.random.split(self.rng)
+        nxt = sampler.sample_step(kk, logits, self.kcfg,
+                                  greedy=self.strategy.greedy)
+        nxt_np = np.asarray(nxt)
+        done_prev = self.done[self.branch_ids].copy()
+        nxt_np = np.where(done_prev, self.eos_id, nxt_np)
+        self.done[self.branch_ids] |= (nxt_np == self.eos_id)
+        self.pos += 1
+        self.step += 1
+        dec = self.strategy.step(logits, self.cur, nxt_np, self.branch_ids,
+                                 self.done, done_prev, self.step)
+        self.log.append(self.branch_ids, nxt_np, dec.counted)
+        self.logical += int(np.sum(dec.counted))
+        self.compute += len(self.branch_ids)
+        self.cur = nxt_np
+        if dec.keep is not None:
+            self.branch_ids = self.branch_ids[dec.keep]
+            self.cur = self.cur[dec.keep]
+            self.compactions.append(len(dec.keep))
+        self.peak = max(self.peak, cache_lib.used_cache_bytes(
+            self.cfg, len(self.branch_ids), self.pos, self.max_seq))
+        if dec.stop or self.step >= self.kcfg.max_new_tokens - 1:
+            self.finished = True
+        return dec
+
+    def result(self) -> GenResult:
+        chosen = self.strategy.choose(self.branch_ids, self.done)
+        toks = self.log.buf[chosen, :self.log.len[chosen]]
+        toks = toks[toks != -1].tolist()
+        return GenResult(
+            tokens=toks, chosen_branch=chosen, all_tokens=self.log.buf,
+            lengths=self.log.len.copy(), logical_tokens=self.logical,
+            compute_tokens=self.compute, peak_cache_bytes=self.peak,
+            steps=self.step, compactions=self.compactions,
+            extra=self.strategy.extra())

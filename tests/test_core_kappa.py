@@ -189,6 +189,28 @@ def test_compact_state_preserves_per_branch_rows():
     assert small.diverged.shape == (2, 2)
 
 
+def test_init_state_row_subset_view():
+    """init_state(cfg, n) builds an n-row state the controller can drive
+    (scheduler admitting fewer rows than the configured fan-out); the
+    pruning schedule still anneals from cfg.num_branches."""
+    cfg = _mk_cfg()
+    state = K.init_state(cfg, n=3)
+    assert state.alive.shape == (3,)
+    assert state.diverged.shape == (3, 3)
+    assert state.di_buf.shape == (3, cfg.window)
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 64))
+    for t in range(3):
+        state = K.kappa_step(state, logits, jnp.arange(3, dtype=jnp.int32),
+                             log_q, cfg)
+    assert state.alive.shape == (3,)
+    assert int(K.num_alive(state)) >= 1
+    small = K.compact_state(state, jnp.array([0, 2]))
+    assert small.alive.shape == (2,)
+    np.testing.assert_allclose(np.asarray(small.traj),
+                               np.asarray(state.traj[jnp.array([0, 2])]))
+
+
 def test_adaptive_horizon_scales_with_difficulty():
     """Paper §5 future work: flat (hard) distributions lengthen τ,
     sharp (easy) ones shorten it."""

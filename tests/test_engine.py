@@ -109,6 +109,26 @@ def test_broadcast_then_gather_roundtrip():
         assert l1.shape == l2.shape
 
 
+def test_bucket_chain_edge_cases():
+    assert cache_lib.bucket_chain(1) == [1]          # n=1: no shrink chain
+    assert cache_lib.bucket_chain(2) == [2, 1]
+    assert cache_lib.bucket_chain(5) == [5, 4, 2, 1]  # non-power-of-two N
+    assert cache_lib.bucket_chain(8) == [8, 4, 2, 1]  # power-of-two N
+    assert cache_lib.bucket_chain(20) == [20, 16, 8, 4, 2, 1]
+
+
+def test_next_bucket_edge_cases():
+    chain = cache_lib.bucket_chain(5)
+    assert cache_lib.next_bucket(chain, 1, 5) == 1    # shrink straight to 1
+    assert cache_lib.next_bucket(chain, 3, 5) == 4    # smallest fitting bucket
+    assert cache_lib.next_bucket(chain, 5, 5) == 5    # alive > every smaller
+    assert cache_lib.next_bucket(chain, 7, 5) == 5    # alive > every bucket
+    assert cache_lib.next_bucket(chain, 4, 4) == 4    # no shrink possible
+    assert cache_lib.next_bucket(chain, 2, 4) == 2
+    chain1 = cache_lib.bucket_chain(1)
+    assert cache_lib.next_bucket(chain1, 1, 1) == 1
+
+
 def test_used_cache_bytes_monotone():
     cfg = get_config("granite-3-8b")
     b1 = cache_lib.used_cache_bytes(cfg, 5, 100, 4096)

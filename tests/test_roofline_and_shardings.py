@@ -45,11 +45,16 @@ def test_roofline_terms_and_dominant():
 # ------------------------------------------------------- sharding rules
 
 def _mesh16():
-    try:
-        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-    except TypeError:
-        return jax.sharding.AbstractMesh(axis_sizes=(16, 16),
-                                         axis_names=("data", "model"))
+    # AbstractMesh's signature has churned across jax releases:
+    # (axis_sizes, axis_names) pairs, kwargs, or a ((name, size), ...) tuple
+    for args in [((16, 16), ("data", "model")),
+                 ((("data", 16), ("model", 16)),)]:
+        try:
+            return jax.sharding.AbstractMesh(*args)
+        except TypeError:
+            continue
+    return jax.sharding.AbstractMesh(axis_sizes=(16, 16),
+                                     axis_names=("data", "model"))
 
 
 @pytest.fixture(scope="module")
