@@ -9,9 +9,11 @@ Env knobs:
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
+import numpy as _np
 
 from repro.configs import get_config
 from repro.data import tokenizer as tok
@@ -49,6 +51,39 @@ def bench_model():
                               num_layers=LAYERS, out=path, seq_len=44,
                               dataset_kw=DATASET_KW, log_every=300)
     return cfg2, params
+
+
+def bench_config() -> dict:
+    """Shared knobs recorded with every BENCH_<name>.json."""
+    return {"full": FULL, "steps": STEPS, "problems": PROBLEMS, "ns": NS,
+            "arch": ARCH, "d_model": D_MODEL, "layers": LAYERS,
+            "max_new": MAX_NEW}
+
+
+def _jsonable(x):
+    if isinstance(x, _np.integer):
+        return int(x)
+    if isinstance(x, _np.floating):
+        return float(x)
+    if isinstance(x, _np.ndarray):
+        return x.tolist()
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    return x
+
+
+def write_bench_json(name: str, rows, wall_s: float, out_dir: str = ".") -> str:
+    """Machine-readable benchmark emission alongside the CSV, so the
+    perf trajectory is trackable across PRs.
+    Schema: {name, rows: [...], wall_s, config}."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {"name": name, "rows": _jsonable(rows), "wall_s": wall_s,
+               "config": bench_config()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 _MEMO = {}

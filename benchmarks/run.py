@@ -7,10 +7,15 @@
   schedule_ablation — §4.2: linear vs cosine vs step pruning
   weight_ablation   — §4.1: (w_KL, w_C, w_H) mixes
   kernel_bench      — fused-score traffic arithmetic
-  throughput        — sequential vs continuous-batched serving tok/s
+  throughput        — sequential vs contiguous vs paged serving tok/s
 
 Usage: PYTHONPATH=src python -m benchmarks.run [table ...]
 Env:   BENCH_FULL=1 for paper-scale N∈{5,10,20} + longer training.
+
+Besides the ``name,us_per_call,derived`` CSV on stdout, every table
+writes ``BENCH_<name>.json`` ({name, rows, wall_s, config}) to the
+working directory so the perf trajectory is machine-trackable across
+PRs (see common.write_bench_json).
 """
 from __future__ import annotations
 
@@ -58,7 +63,9 @@ def main() -> None:
         rows = mod.run(cfg, params)
         for line in mod.emit_csv(rows):
             print(line)
-        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        wall = time.time() - t0
+        path = common.write_bench_json(name, rows, wall)
+        print(f"# {name} done in {wall:.0f}s -> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

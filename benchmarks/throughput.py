@@ -1,23 +1,40 @@
-"""Serving throughput: sequential vs continuous-batched decoding across
-methods and queue depths.
+"""Serving throughput: sequential vs continuous-batched vs paged
+decoding across methods and queue depths.
 
-Sequential serving decodes one request at a time — after KAPPA/ST-BoN
-prune to one survivor, the device runs a single branch row for the whole
-EOS tail. The continuous-batching scheduler backfills freed rows with
-queued prefills, so the same hardware row budget serves several requests
-per step. Expectation (acceptance criterion): continuous-batched KAPPA
-achieves higher aggregate tokens/s than sequential serving at queue
-depth >= 4 on the toy bench model.
+Part 1 (sequential vs contiguous, per method): sequential serving
+decodes one request at a time — after KAPPA/ST-BoN prune to one
+survivor, the device runs a single branch row for the whole EOS tail.
+The continuous-batching scheduler backfills freed rows with queued
+prefills, so the same hardware row budget serves several requests per
+step.
 
-Both modes decode the same prompts with the same per-request RNG keys and
-the same max_seq, so their outputs are token-for-token identical — the
-comparison is pure wall-clock.
+Part 2 (contiguous vs paged at equal KV memory, mixed-length prompts):
+the contiguous pool reserves ``max_seq`` slots per row no matter how
+short a request is, so its row count is capped at ``budget / max_seq``.
+The paged pool spends the *same KV byte budget* as pages sized to each
+request's own ``prompt + max_new`` need — with mixed lengths it packs
+more concurrent rows into the same memory, and pruning returns pages
+the moment it happens. Three modes are timed on identical tokens:
+
+  * ``pr1``   — contiguous pool, PR 1 dispatch pattern (one sampling
+                call + one host sync per request per tick);
+  * ``cont``  — contiguous pool + this PR's fused one-dispatch-per-tick
+                sampler (isolates the batched-sampling win);
+  * ``paged`` — paged pool + fused sampler (adds the admission win).
+
+Acceptance: paged ≥ 1.5× the PR 1 contiguous scheduler's aggregate
+tokens/s at queue depth ≥ 8.
+
+Every mode decodes the same prompts with the same per-request RNG keys,
+so outputs are token-for-token identical (asserted) — the comparison is
+pure wall-clock.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
@@ -25,11 +42,20 @@ from repro.configs.base import KappaConfig
 from repro.data import tasks
 from repro.data import tokenizer as tok
 from repro.launch.serve import _strategy_factory
+from repro.models import init_cache
 from repro.serving import engine
-from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving import sampler
+from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 
 DEPTHS = [1, 4, 8] if common.FULL else [1, 4]
+PAGED_DEPTHS = [8, 16]          # acceptance criterion lives at depth >= 8
+PAGED_METHODS = ["kappa", "bon"]
+PAGED_REPS = 3                  # best-of-R wall clock per mode (CPU noise)
 BENCH_METHODS = ["kappa", "stbon", "bon"]
+PAGE_SIZE = 16
+# per-request decode budgets cycled over the queue — the mixed-length
+# regime where need-sized page reservations beat max_seq-sized rows
+MIXED_MAX_NEW = [common.MAX_NEW, 10, 16, 24]
 
 
 def _kcfg(n: int = 5) -> KappaConfig:
@@ -40,6 +66,10 @@ def _kcfg(n: int = 5) -> KappaConfig:
 def _prompts(depth: int):
     probs = tasks.make_dataset(1234, depth, **common.DATASET_KW)
     return [np.array(p.prompt) for p in probs]
+
+
+def _mixed_max_new(depth: int):
+    return [MIXED_MAX_NEW[i % len(MIXED_MAX_NEW)] for i in range(depth)]
 
 
 def _run_sequential(cfg, params, kcfg, method, prompts, max_seq):
@@ -54,13 +84,16 @@ def _run_sequential(cfg, params, kcfg, method, prompts, max_seq):
     return gens, toks, dt
 
 
-def _run_scheduled(cfg, params, kcfg, method, prompts, max_seq, rows):
+def _run_scheduled(cfg, params, kcfg, method, prompts, max_seq, rows, *,
+                   paged=False, max_news=None, **sched_kw):
     factory = _strategy_factory(method, kcfg)
-    sched = ContinuousBatchingScheduler(
-        params, cfg, kcfg, rows=rows, max_seq=max_seq, method=method,
-        eos_id=tok.EOS, bos_id=tok.BOS, strategy_factory=factory)
-    rids = [sched.submit(p, jax.random.PRNGKey(i))
-            for i, p in enumerate(prompts)]
+    cls = PagedScheduler if paged else ContinuousBatchingScheduler
+    sched = cls(params, cfg, kcfg, rows=rows, max_seq=max_seq, method=method,
+                eos_id=tok.EOS, bos_id=tok.BOS, strategy_factory=factory,
+                **sched_kw)
+    max_news = max_news or [None] * len(prompts)
+    rids = [sched.submit(p, jax.random.PRNGKey(i), max_new=mn)
+            for i, (p, mn) in enumerate(zip(prompts, max_news))]
     res = sched.run()
     tp = sched.throughput()
     return [res[r] for r in rids], tp
@@ -68,17 +101,40 @@ def _run_scheduled(cfg, params, kcfg, method, prompts, max_seq, rows):
 
 def run(cfg, params):
     kcfg = _kcfg()
-    rows_pool = 2 * kcfg.num_branches
+    fan_out = kcfg.num_branches
+    rows_pool = 2 * fan_out
     out = []
     # warm the jit caches so the timed comparison measures steady-state
     # serving, not compiles: prefill is keyed on prompt length (warm every
     # distinct length — the sequential pass runs first and would otherwise
     # absorb those compiles), decode on batch shape (one request walks the
     # whole bucket chain; one scheduler run compiles the pool shapes)
-    warm = _prompts(max(DEPTHS))
+    warm = _prompts(max(DEPTHS + PAGED_DEPTHS))
     max_seq = max(len(p) for p in warm) + kcfg.max_new_tokens
     for p in warm:
         engine._prefill_one(params, cfg, p, max_seq)
+
+    def warm_decode_shapes(ms):
+        # BoN's eager EOS-row release means the sequential engine can hit
+        # ANY survivor batch size 1..fan_out; compile every decode + row-
+        # sampling shape up front so none lands inside a timed region
+        for n in range(1, fan_out + 1):
+            cache = init_cache(cfg, n, ms)
+            engine._model_step(params, cfg, jnp.zeros((n,), jnp.int32),
+                               jnp.int32(4), cache)
+            sampler.sample_rows(
+                jnp.zeros((n, 2), jnp.uint32),
+                jnp.zeros((n, cfg.vocab_size), jnp.float32),
+                jnp.zeros((n,), bool), kcfg, want_picked_lp=True)
+            sampler.sample_rows(
+                jnp.zeros((n, 2), jnp.uint32),
+                jnp.zeros((n, cfg.vocab_size), jnp.float32),
+                jnp.zeros((n,), bool), kcfg)
+            sampler.picked_logprob(
+                jnp.zeros((n, cfg.vocab_size), jnp.float32),
+                jnp.zeros((n,), jnp.int32))
+
+    warm_decode_shapes(max_seq)
     for method in BENCH_METHODS:
         _run_sequential(cfg, params, kcfg, method, warm[:1], max_seq)
         _run_scheduled(cfg, params, kcfg, method, warm[:1], max_seq, rows_pool)
@@ -94,7 +150,8 @@ def run(cfg, params):
                 f"{method}: scheduler diverged from sequential serving"
             seq_tps = toks_s / max(dt_s, 1e-9)
             out.append({
-                "method": method, "depth": depth, "rows": rows_pool,
+                "kind": "continuous", "method": method, "depth": depth,
+                "rows": rows_pool,
                 "seq_tokens_per_s": seq_tps,
                 "cb_tokens_per_s": tp["tokens_per_s"],
                 "speedup": tp["tokens_per_s"] / max(seq_tps, 1e-9),
@@ -102,31 +159,140 @@ def run(cfg, params):
                 "ticks": tp["ticks"],
                 "seq_time_s": dt_s, "cb_time_s": tp["time_s"],
             })
+
+    # ---- contiguous vs paged at equal KV token budget, mixed lengths.
+    # Contiguous: rows_pool rows × max_seq slots each. Paged: the same
+    # slot budget cut into pages, spread over more row slots — admission
+    # is bounded by pages actually needed, not worst-case rows.
+    max_seq_p = -(-max_seq // PAGE_SIZE) * PAGE_SIZE
+    num_pages = rows_pool * max_seq_p // PAGE_SIZE
+    # 3× fan-out row slots: enough to hold every fan-out the page budget
+    # can admit (pages bind first) without paying for a wider model step
+    rows_paged = 3 * fan_out
+    # warm every shape the comparison touches: prefill at the padded
+    # max_seq, each pool's decode shape, and — because the KAPPA
+    # controller jit is keyed on the whole kcfg — every mixed max_new
+    # variant, in every mode (the PR 1 run goes first and would
+    # otherwise absorb those compiles into its timing)
+    for p in warm:
+        engine._prefill_one(params, cfg, p, max_seq_p)
+    warm_decode_shapes(max_seq_p)
+    warm_mixed = MIXED_MAX_NEW
+    for method in PAGED_METHODS:
+        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+                       rows_pool, max_news=warm_mixed)
+        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+                       rows_pool, max_news=warm_mixed, fused_sampling=False)
+        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+                       rows_paged, paged=True, max_news=warm_mixed,
+                       page_size=PAGE_SIZE, num_pages=num_pages)
+    for method in PAGED_METHODS:
+        for depth in PAGED_DEPTHS:
+            prompts = _prompts(depth)
+            max_news = _mixed_max_new(depth)
+            runs = {
+                "pr1": lambda: _run_scheduled(
+                    cfg, params, kcfg, method, prompts, max_seq_p,
+                    rows_pool, max_news=max_news, fused_sampling=False),
+                "cont": lambda: _run_scheduled(
+                    cfg, params, kcfg, method, prompts, max_seq_p,
+                    rows_pool, max_news=max_news),
+                "paged": lambda: _run_scheduled(
+                    cfg, params, kcfg, method, prompts, max_seq_p,
+                    rows_paged, paged=True, max_news=max_news,
+                    page_size=PAGE_SIZE, num_pages=num_pages),
+            }
+            # interleaved best-of-R: each rep times all three modes
+            # back-to-back, so multi-second machine speed phases hit
+            # every mode instead of whichever block they land on; best
+            # wall clock per mode is then comparable (token streams are
+            # deterministic — only timing varies between reps)
+            gens, tps = {}, {}
+            for _ in range(PAGED_REPS):
+                for mode, fn in runs.items():
+                    g, tp = fn()
+                    gens[mode] = g
+                    if mode not in tps or tp["tokens_per_s"] \
+                            > tps[mode]["tokens_per_s"]:
+                        tps[mode] = tp
+            gens_1, gens_c, gens_p = gens["pr1"], gens["cont"], gens["paged"]
+            tp_1, tp_c, tp_p = tps["pr1"], tps["cont"], tps["paged"]
+            assert all(a.tokens == b.tokens == c.tokens
+                       for a, b, c in zip(gens_1, gens_c, gens_p)), \
+                "paged/fused serving diverged from the PR 1 baseline"
+            out.append({
+                "kind": "paged", "method": method, "depth": depth,
+                "rows_contiguous": rows_pool, "rows_paged": rows_paged,
+                "page_size": PAGE_SIZE, "num_pages": num_pages,
+                "kv_slot_budget": rows_pool * max_seq_p,
+                "pr1_tokens_per_s": tp_1["tokens_per_s"],
+                "contiguous_tokens_per_s": tp_c["tokens_per_s"],
+                "paged_tokens_per_s": tp_p["tokens_per_s"],
+                "fused_sampling_speedup": tp_c["tokens_per_s"]
+                / max(tp_1["tokens_per_s"], 1e-9),
+                "paged_vs_contiguous": tp_p["tokens_per_s"]
+                / max(tp_c["tokens_per_s"], 1e-9),
+                "paged_speedup": tp_p["tokens_per_s"]
+                / max(tp_1["tokens_per_s"], 1e-9),
+                "contiguous_row_utilization": tp_c["row_utilization"],
+                "paged_row_utilization": tp_p["row_utilization"],
+                "page_utilization": tp_p["page_utilization"],
+                "contiguous_ticks": tp_c["ticks"],
+                "paged_ticks": tp_p["ticks"],
+                "pr1_time_s": tp_1["time_s"],
+                "contiguous_time_s": tp_c["time_s"],
+                "paged_time_s": tp_p["time_s"],
+            })
     return out
 
 
 def emit_csv(rows):
     out = []
     for r in rows:
-        name = f"throughput/{r['method']}_depth{r['depth']}"
-        us = r["cb_time_s"] * 1e6 / max(r["ticks"], 1)
-        derived = (f"seq_tok_s={r['seq_tokens_per_s']:.1f};"
-                   f"cb_tok_s={r['cb_tokens_per_s']:.1f};"
-                   f"speedup={r['speedup']:.2f};"
-                   f"util={r['row_utilization']:.2f}")
+        if r["kind"] == "continuous":
+            name = f"throughput/{r['method']}_depth{r['depth']}"
+            us = r["cb_time_s"] * 1e6 / max(r["ticks"], 1)
+            derived = (f"seq_tok_s={r['seq_tokens_per_s']:.1f};"
+                       f"cb_tok_s={r['cb_tokens_per_s']:.1f};"
+                       f"speedup={r['speedup']:.2f};"
+                       f"util={r['row_utilization']:.2f}")
+        else:
+            name = f"throughput/paged_{r['method']}_depth{r['depth']}"
+            us = r["paged_time_s"] * 1e6 / max(r["paged_ticks"], 1)
+            derived = (f"pr1_tok_s={r['pr1_tokens_per_s']:.1f};"
+                       f"cont_tok_s={r['contiguous_tokens_per_s']:.1f};"
+                       f"paged_tok_s={r['paged_tokens_per_s']:.1f};"
+                       f"paged_speedup={r['paged_speedup']:.2f};"
+                       f"page_util={r['page_utilization']:.2f}")
         out.append(f"{name},{us:.1f},{derived}")
     return out
 
 
 if __name__ == "__main__":
     cfg, params = common.bench_model()
+    t0 = time.time()
     rows = run(cfg, params)
     print("name,us_per_call,derived")
     for line in emit_csv(rows):
         print(line)
-    kap = {r["depth"]: r for r in rows if r["method"] == "kappa"}
+    common.write_bench_json("throughput", rows, time.time() - t0)
+    kap = {r["depth"]: r for r in rows
+           if r["kind"] == "continuous" and r["method"] == "kappa"}
     for depth, r in sorted(kap.items()):
         if depth >= 4:
             verdict = "PASS" if r["speedup"] > 1.0 else "FAIL"
             print(f"# depth={depth}: continuous batching speedup "
                   f"{r['speedup']:.2f}x -> {verdict}")
+    paged_rows = [r for r in rows if r["kind"] == "paged" and r["depth"] >= 8]
+    for r in paged_rows:
+        print(f"# {r['method']} depth={r['depth']}: paged+fused vs PR1 "
+              f"contiguous {r['paged_speedup']:.2f}x "
+              f"(fused sampling alone {r['fused_sampling_speedup']:.2f}x,"
+              f" paging alone {r['paged_vs_contiguous']:.2f}x)")
+    if paged_rows:
+        best = max(paged_rows, key=lambda r: r["paged_speedup"])
+        verdict = "PASS" if best["paged_speedup"] >= 1.5 else "FAIL"
+        print(f"# acceptance: paged+batched-sampling vs PR1 contiguous at "
+              f"queue depth >= 8: {best['paged_speedup']:.2f}x "
+              f"({best['method']}, depth {best['depth']}; >=1.5 target) "
+              f"-> {verdict}")

@@ -46,3 +46,13 @@ print(f"continuous batching (N=5, rows=10): {cb5['tokens_per_s']:.1f} tok/s, "
       f"{cb5['requests_per_s']:.2f} req/s, "
       f"row utilization {cb5['row_utilization']:.2f} "
       f"(sequential wall {seq5['time_s']:.1f}s vs {cb5['time_s']:.1f}s)")
+
+# the paged pool: same tokens again, but KV reservations are per-request
+# pages, pruning frees pages instantly, and more rows share the budget
+pg5 = serve_eval(args.arch, "kappa", n=5, problems=args.problems,
+                 params=params, cfg=cfg, verbose=False, scheduler=True,
+                 paged=True, page_size=16, sched_rows=20)
+print(f"paged pool        (N=5, rows=20): {pg5['tokens_per_s']:.1f} tok/s, "
+      f"{pg5['requests_per_s']:.2f} req/s, "
+      f"page utilization {pg5['page_utilization']:.2f} "
+      f"(wall {pg5['time_s']:.1f}s)")

@@ -20,11 +20,14 @@ bf16) — comfortably inside VMEM with double buffering.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import interpret_mode
 
 NEG = -2.0 ** 30
 
@@ -70,12 +73,24 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
         o_ref[0, 0] = (acc_s[:] / jnp.maximum(l_s[:], 1e-30)).astype(o_ref.dtype)
 
 
+def decode_attn_pallas(q, k, v, pos, *, window: int = 0, ring: bool = False,
+                       tile_s: int = 512, interpret: Optional[bool] = None):
+    """q: (B, H, hd); k, v: (B, S, KV, hd); pos: scalar int32.
+    Returns (B, H, hd) fp32. See ref.py for slot semantics.
+
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_mode`
+    (compiled on TPU, interpreter elsewhere) — callers bypassing ops.py no
+    longer silently run the Pallas interpreter on real hardware."""
+    if interpret is None:
+        interpret = interpret_mode()
+    return _decode_attn_jit(q, k, v, pos, window=window, ring=ring,
+                            tile_s=tile_s, interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("window", "ring", "tile_s", "interpret"))
-def decode_attn_pallas(q, k, v, pos, *, window: int = 0, ring: bool = False,
-                       tile_s: int = 512, interpret: bool = True):
-    """q: (B, H, hd); k, v: (B, S, KV, hd); pos: scalar int32.
-    Returns (B, H, hd) fp32. See ref.py for slot semantics."""
+def _decode_attn_jit(q, k, v, pos, *, window: int, ring: bool,
+                     tile_s: int, interpret: bool):
     B, S, KV, hd = k.shape
     H = q.shape[1]
     G = H // KV
@@ -113,4 +128,105 @@ def decode_attn_pallas(q, k, v, pos, *, window: int = 0, ring: bool = False,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(pos, jnp.int32).reshape(1), qr, k, v)
+    return out.reshape(B, H, hd)
+
+
+# ----------------------------------------------------------------- paged
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s,
+                  acc_s, *, n_pages: int, page_size: int, scale: float):
+    """Paged flash-decode: one grid step streams one owned page.
+
+    The S-tile index map dereferences the block table (scalar-prefetched),
+    so the kernel's K/V DMAs touch only physical pages a row's table names
+    — pruned/unallocated capacity is never streamed. Validity is purely
+    positional (kv_pos <= pos[b]); table entries past a row's position may
+    alias a shared trash page and are masked here."""
+    b = pl.program_id(0)
+    li = pl.program_id(2)                         # logical page index
+    pos = pos_ref[b]
+
+    @pl.when(li == 0)
+    def _init():
+        m_s[:] = jnp.full_like(m_s, NEG)
+        l_s[:] = jnp.zeros_like(l_s)
+        acc_s[:] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ps)
+
+    kv_pos = li * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = kv_pos <= pos
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_s[:]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    r = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # guard all-masked tiles
+    l_s[:] = l_s[:] * r + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[:] = acc_s[:] * r + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_s[:] = m_new
+
+    @pl.when(li == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[:] / jnp.maximum(l_s[:], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attn_pallas(q, k_pages, v_pages, block_tables, pos, *,
+                             interpret: Optional[bool] = None):
+    """Paged GQA flash-decode. q: (B, H, hd); k_pages, v_pages:
+    (P, ps, KV, hd) page pools; block_tables: (B, MP) int32 physical page
+    per logical page; pos: (B,) int32 per-row positions.
+    Returns (B, H, hd) fp32. See ref.paged_decode_attn_ref for the page
+    semantics (entries past pos may alias a trash page — masked)."""
+    if interpret is None:
+        interpret = interpret_mode()
+    return _paged_decode_attn_jit(q, k_pages, v_pages, block_tables, pos,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_attn_jit(q, k_pages, v_pages, block_tables, pos, *,
+                           interpret: bool):
+    B, H, hd = q.shape
+    P, ps, KV, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd)
+    bt_flat = jnp.asarray(block_tables, jnp.int32).reshape(B * MP)
+
+    def kv_map(b, kv, l, bt_ref, pos_ref):
+        # dereference the block table: stream only the row's own pages
+        phys = bt_ref[b * MP + l]
+        return (phys, 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, MP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, kv, l, bt_ref, pos_ref: (b, kv, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kv, l, bt_ref, pos_ref: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_kernel, n_pages=MP, page_size=ps,
+                             scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(bt_flat, jnp.asarray(pos, jnp.int32), qr, k_pages, v_pages)
     return out.reshape(B, H, hd)

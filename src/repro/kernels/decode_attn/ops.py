@@ -1,8 +1,13 @@
-"""Public wrapper for the flash-decode attention kernel."""
+"""Public wrappers for the flash-decode attention kernels (contiguous
+and paged). Both entry points resolve interpret mode themselves, so the
+explicit pass-through here is belt-and-braces for readability."""
 from __future__ import annotations
 
 from repro.kernels import interpret_mode
-from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.kernels.decode_attn.kernel import (
+    decode_attn_pallas,
+    paged_decode_attn_pallas,
+)
 
 
 def decode_attn(q, k, v, pos, *, window: int = 0, ring: bool = False,
@@ -10,3 +15,11 @@ def decode_attn(q, k, v, pos, *, window: int = 0, ring: bool = False,
     """Flash GQA decode: q (B,H,hd) vs cache (B,S,KV,hd). See kernel.py."""
     return decode_attn_pallas(q, k, v, pos, window=window, ring=ring,
                               tile_s=tile_s, interpret=interpret_mode())
+
+
+def paged_decode_attn(q, k_pages, v_pages, block_tables, pos):
+    """Paged flash GQA decode: q (B,H,hd) vs page pool (P,ps,KV,hd)
+    addressed through (B,MP) block tables at per-row positions (B,).
+    See kernel.py / ref.py for the page semantics."""
+    return paged_decode_attn_pallas(q, k_pages, v_pages, block_tables, pos,
+                                    interpret=interpret_mode())

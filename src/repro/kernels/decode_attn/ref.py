@@ -40,3 +40,40 @@ def decode_attn_ref(q, k, v, pos, *, window: int = 0, ring: bool = False):
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
     return out.reshape(B, H, hd)
+
+
+def paged_decode_attn_ref(q, k_pages, v_pages, block_tables, pos):
+    """One-token GQA decode attention over a paged KV pool.
+
+    q: (B, H, hd) — query for the current token (already rope'd)
+    k_pages, v_pages: (P, ps, KV, hd) — global page pool; physical page p
+        holds ps contiguous token slots of whichever row owns it
+    block_tables: (B, MP) int32 — row b's logical page l lives at physical
+        page block_tables[b, l]. Entries for pages past a row's current
+        position may point anywhere (a shared trash page): validity is
+        purely positional, ``kv_pos <= pos[b]``, because the allocator
+        only hands out pages covering positions the row will write.
+    pos: (B,) int32 — per-row absolute position of the current token
+        (its K/V already written into the owning page)
+
+    Returns (B, H, hd) fp32.
+    """
+    B, H, hd = q.shape
+    P, ps, KV, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    G = H // KV
+
+    # gather each row's pages into a contiguous logical view (B, MP*ps, ...)
+    k = k_pages[block_tables].reshape(B, MP * ps, KV, hd)
+    v = v_pages[block_tables].reshape(B, MP * ps, KV, hd)
+
+    kv_pos = jnp.arange(MP * ps)
+    valid = kv_pos[None, :] <= jnp.asarray(pos)[:, None]        # (B, S)
+
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qr, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)

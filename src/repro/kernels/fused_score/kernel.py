@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interpret_mode
+
 NEG = -1e30
 
 
@@ -73,14 +75,24 @@ def _kernel(x_ref, lq_ref, kl_ref, conf_ref, ent_ref,
         conf_ref[:] = 1.0 / l
 
 
-@functools.partial(jax.jit, static_argnames=("tile_b", "tile_v", "interpret"))
 def fused_score_pallas(logits, log_q, *, tile_b: int = 8, tile_v: int = 2048,
-                       interpret: bool = True):
+                       interpret=None):
     """logits: (B, V); log_q: (V,) fp32 → (kl, conf, ent) each (B,) fp32.
 
     B and V are padded to tile multiples inside (pad rows are discarded;
     pad vocab entries use −inf logits so they contribute nothing).
-    """
+
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_mode`
+    so direct callers never run the Pallas interpreter on a real TPU."""
+    if interpret is None:
+        interpret = interpret_mode()
+    return _fused_score_jit(logits, log_q, tile_b=tile_b, tile_v=tile_v,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_v", "interpret"))
+def _fused_score_jit(logits, log_q, *, tile_b: int, tile_v: int,
+                     interpret: bool):
     B, V = logits.shape
     tb = min(tile_b, max(B, 1))
     tv = min(tile_v, V)

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import interpret_mode
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sfin_ref, s_s,
             *, n_chunks: int, chunk: int):
@@ -83,12 +85,22 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sfin_ref, s_s,
         sfin_ref[0, 0] = s_s[:]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_scan_pallas(r, k, v, w, u, s0, *, chunk: int = 32,
-                      interpret: bool = True):
+                      interpret=None):
     """Chunk-parallel WKV6. Shapes as ref.py. T must divide by ``chunk``
     (callers pad). s0 must be zeros (scratch-initialized state; nonzero
-    initial state is folded in by the ops.py wrapper)."""
+    initial state is folded in by the ops.py wrapper).
+
+    ``interpret=None`` resolves via :func:`repro.kernels.interpret_mode`
+    so direct callers never run the Pallas interpreter on a real TPU."""
+    if interpret is None:
+        interpret = interpret_mode()
+    return _rwkv6_scan_jit(r, k, v, w, u, s0, chunk=chunk,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _rwkv6_scan_jit(r, k, v, w, u, s0, *, chunk: int, interpret: bool):
     B, T, H, hd = r.shape
     assert T % chunk == 0, f"T={T} % chunk={chunk}"
     n_chunks = T // chunk

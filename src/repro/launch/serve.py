@@ -25,7 +25,7 @@ from repro.models import init_params
 from repro.models.frontends import stub_frontend
 from repro.serving import engine
 from repro.serving import strategies
-from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 from repro.training import checkpoint
 
 METHODS = {
@@ -50,7 +50,9 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                num_layers: int = 2, seed: int = 999, max_new: int = 48,
                kcfg_kw: dict | None = None, dataset_kw: dict | None = None,
                params=None, cfg=None, verbose: bool = True,
-               scheduler: bool = False, sched_rows: int | None = None) -> dict:
+               scheduler: bool = False, sched_rows: int | None = None,
+               paged: bool = False, page_size: int = 64,
+               num_pages: int | None = None) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -63,6 +65,7 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
               horizon=8, window=8, mom_buckets=4)
     kw.update(kcfg_kw or {})
     kcfg = KappaConfig(**kw)
+    scheduler = scheduler or paged  # paged pool implies the scheduler path
     dkw = dict(min_steps=2, max_steps=5, num_ops=2, max_operand=10)
     dkw.update(dataset_kw or {})
     test = tasks.make_dataset(seed, problems, **dkw)
@@ -74,10 +77,14 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         n_prefix = engine._n_prefix(cfg)
         max_seq = max(len(p.prompt) for p in test) + max_new + n_prefix
         fan_out = factory().rows(kcfg)
-        sched = ContinuousBatchingScheduler(
-            params, cfg, kcfg, rows=sched_rows or 2 * fan_out,
-            max_seq=max_seq, method=method, eos_id=tok.EOS, bos_id=tok.BOS,
-            frontend=fe, strategy_factory=factory)
+        sched_kw = dict(rows=sched_rows or 2 * fan_out, max_seq=max_seq,
+                        method=method, eos_id=tok.EOS, bos_id=tok.BOS,
+                        frontend=fe, strategy_factory=factory)
+        if paged:
+            sched = PagedScheduler(params, cfg, kcfg, page_size=page_size,
+                                   num_pages=num_pages, **sched_kw)
+        else:
+            sched = ContinuousBatchingScheduler(params, cfg, kcfg, **sched_kw)
         rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i))
                 for i, prob in enumerate(test)]
         res = sched.run()
@@ -117,6 +124,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
             "row_utilization": tp["row_utilization"],
             "ticks": tp["ticks"],
         })
+        if paged:
+            out["page_utilization"] = tp["page_utilization"]
     if verbose:
         line = (f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
                 f"total_toks={out['total_tokens']:8.1f} "
@@ -141,10 +150,19 @@ def main(argv=None):
                     help="serve through the continuous-batching row pool")
     ap.add_argument("--rows", type=int, default=None,
                     help="pool rows for --scheduler (default 2x fan-out)")
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged KV pool scheduler (implies --scheduler)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="token slots per KV page for --paged")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="allocatable KV pages for --paged (default: no "
+                         "page pressure, rows*max_seq/page_size)")
     args = ap.parse_args(argv)
     serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
                ckpt=args.ckpt, max_new=args.max_new,
-               scheduler=args.scheduler, sched_rows=args.rows)
+               scheduler=args.scheduler or args.paged, sched_rows=args.rows,
+               paged=args.paged, page_size=args.page_size,
+               num_pages=args.num_pages)
 
 
 if __name__ == "__main__":

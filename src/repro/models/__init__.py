@@ -1,9 +1,11 @@
 from repro.models.transformer import (
     decode_step,
     init_cache,
+    init_paged_cache,
     init_params,
     prefill,
     train_logits,
 )
 
-__all__ = ["init_params", "train_logits", "init_cache", "prefill", "decode_step"]
+__all__ = ["init_params", "train_logits", "init_cache", "init_paged_cache",
+           "prefill", "decode_step"]

@@ -151,6 +151,19 @@ def init_ring_cache(batch: int, window: int, num_kv_heads: int,
                            quantized)
 
 
+def init_paged_kv(num_pages: int, page_size: int, num_kv_heads: int,
+                  head_dim: int, dtype, quantized: bool = False):
+    """Paged pool for a global-attention layer: physical page p holds
+    ``page_size`` contiguous token slots of whichever row owns it
+    (DESIGN.md §5). Layout mirrors the full cache with the batch axis
+    replaced by the page axis: (P, ps, KV, hd). The caller reserves one
+    extra *trash* page (by convention the last physical index) that
+    unowned block-table entries alias — writes to it are garbage, reads
+    from it are always masked."""
+    return init_full_cache(num_pages, page_size, num_kv_heads, head_dim,
+                           dtype, quantized)
+
+
 def _is_quantized(cache) -> bool:
     return cache["k"].dtype == jnp.int8
 
@@ -337,6 +350,65 @@ def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
     mask = valid[:, None, None, None, :] if valid.ndim == 2 \
         else valid[None, None, None, None, :]
     out = _attend(qr, new_k, new_v, mask)
+    y = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return y, new_cache
+
+
+def attn_decode_paged(p, x, pos, cache, block_tables, *, num_heads: int,
+                      num_kv_heads: int, head_dim: int, rope_theta: float,
+                      use_rope: bool):
+    """One-token decode against a paged KV pool (global layers only).
+
+    x: (B, 1, d); pos: (B,) int32 per-row positions; cache: page pool from
+    :func:`init_paged_kv` with leaves (P, ps, KV, hd); block_tables:
+    (B, MP) int32 mapping row-logical pages to physical pages (unowned
+    entries alias the trash page — validity is purely ``kv_pos <= pos``).
+
+    The current token's K/V is written into the owning page, then the
+    row attends over its own pages gathered into a contiguous logical
+    view. The gather is the pure-jnp oracle path; on TPU the paged
+    flash-decode kernel (kernels/decode_attn) streams the pages directly
+    through the block table instead. Returns (y (B,1,d), new_cache)."""
+    B = x.shape[0]
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    pos = jnp.asarray(pos)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
+
+    ps = cache["k"].shape[1]
+    MP = block_tables.shape[1]
+    lpage = pos // ps
+    off = pos % ps
+    phys = jnp.take_along_axis(block_tables, lpage[:, None], axis=1)[:, 0]
+
+    quant = _is_quantized(cache)
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache["k_s"] = cache["k_s"].at[phys, off].set(ks[:, 0])
+        new_cache["v_s"] = cache["v_s"].at[phys, off].set(vs[:, 0])
+    else:
+        kq, vq = k, v
+    new_cache["k"] = cache["k"].at[phys, off].set(kq[:, 0].astype(cache["k"].dtype))
+    new_cache["v"] = cache["v"].at[phys, off].set(vq[:, 0].astype(cache["v"].dtype))
+
+    # gather the row's pages into its contiguous logical sequence view
+    ka = new_cache["k"][block_tables].reshape(B, MP * ps, num_kv_heads, head_dim)
+    va = new_cache["v"][block_tables].reshape(B, MP * ps, num_kv_heads, head_dim)
+    if quant:
+        ksa = new_cache["k_s"][block_tables].reshape(B, MP * ps, num_kv_heads)
+        vsa = new_cache["v_s"][block_tables].reshape(B, MP * ps, num_kv_heads)
+        ka = _dequantize_kv(ka, ksa, x.dtype)
+        va = _dequantize_kv(va, vsa, x.dtype)
+
+    kv_positions = jnp.arange(MP * ps)
+    valid = kv_positions[None, :] <= pos[:, None]               # (B, S)
+
+    qr = q.reshape(B, 1, num_kv_heads, G, head_dim)
+    out = _attend(qr, ka, va, valid[:, None, None, None, :])
     y = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
     return y, new_cache
 

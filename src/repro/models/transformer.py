@@ -258,9 +258,17 @@ def _block_prefill(p, cfg: ModelConfig, bt: str, x, positions, cache, enc_kv=Non
     return x + y2, new_cache, aux
 
 
-def _block_decode(p, cfg: ModelConfig, bt: str, x, pos, cache, enc_kv=None):
+def _block_decode(p, cfg: ModelConfig, bt: str, x, pos, cache, enc_kv=None,
+                  block_tables=None):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
-    if bt in ("global", "local"):
+    if bt == "global" and block_tables is not None:
+        y, new_cache = attn.attn_decode_paged(
+            p["attn"], h, pos, cache, block_tables,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+        x = x + y
+    elif bt in ("global", "local"):
         y, new_cache = attn.attn_decode(
             p["attn"], h, pos, cache,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
@@ -483,6 +491,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_seq: int):
+    """Paged variant of :func:`init_cache` (DESIGN.md §5).
+
+    Global-attention layers share a page pool — their leaves get shape
+    (num_pages + 1, page_size, KV, hd), where physical page ``num_pages``
+    is the shared *trash* page that unowned block-table entries alias.
+    Every other leaf family (sliding-window ring caches, recurrent /
+    RWKV-6 state, cross-attention K/V) keeps its per-row layout: those
+    states are O(window) or O(1) in sequence, so paging them would buy
+    nothing. One block table therefore addresses every global layer — a
+    logical page maps to the same physical index in each layer's pool."""
+    dtype = jnp.dtype(cfg.dtype)
+    pattern = cfg.layer_pattern
+    P = len(pattern)
+    K, R = cfg.num_layers // P, cfg.num_layers % P
+    hd = cfg.resolved_head_dim
+    quant = cfg.kv_cache_dtype == "int8"
+
+    def one(bt):
+        if bt == "global":
+            return attn.init_paged_kv(num_pages + 1, page_size,
+                                      cfg.num_kv_heads, hd, dtype,
+                                      quantized=quant)
+        if bt == "local":
+            W = min(cfg.window_size, max_seq)
+            return attn.init_ring_cache(batch, W, cfg.num_kv_heads, hd,
+                                        dtype, quantized=quant)
+        if bt == "recurrent":
+            return rglru_lib.init_rglru_state(batch, cfg.d_model, dtype)
+        if bt == "rwkv6":
+            return rwkv6_lib.init_rwkv6_state(batch, cfg.d_model,
+                                              cfg.num_heads, hd, dtype)
+        raise ValueError(bt)
+
+    def stacked(bt):
+        c = one(bt)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (K,) + a.shape).copy(), c) \
+            if K > 0 else c
+
+    cache = {
+        "stack": tuple(stacked(pattern[j]) for j in range(P)) if K > 0 else (),
+        "rem": tuple(one(pattern[j % P]) for j in range(R)),
+    }
+    if cfg.is_encoder_decoder:
+        xshape = (batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd)
+        cache["xkv_stack"] = tuple(
+            {"k": jnp.zeros((K,) + xshape, dtype), "v": jnp.zeros((K,) + xshape, dtype)}
+            for _ in range(P)) if K > 0 else ()
+        cache["xkv_rem"] = tuple({"k": jnp.zeros(xshape, dtype),
+                                  "v": jnp.zeros(xshape, dtype)} for _ in range(R))
+    return cache
+
+
 def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
     """Process the prompt, fill the cache. tokens: (B, S_prompt).
     Returns (logits at last position (B, V), cache)."""
@@ -550,10 +612,14 @@ def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
     return logits, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, token, pos, cache):
+def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None):
     """One decode step. token: (B,) int32; pos: scalar int32 (absolute
     position of this token) or (B,) int32 per-row positions (continuous
     batching: pool rows belong to different requests).
+
+    ``block_tables`` ((B, MP) int32, optional) switches global-attention
+    layers to the paged cache path: ``cache`` must then come from
+    :func:`init_paged_cache` and ``pos`` must be per-row (DESIGN.md §5).
     Returns (logits (B, V), new_cache)."""
     pattern = cfg.layer_pattern
     P = len(pattern)
@@ -580,7 +646,8 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache):
         newc = []
         for j, bt in enumerate(pattern):
             ekv = (xkvs[j]["k"], xkvs[j]["v"]) if xkvs is not None else None
-            x, c = _block_decode(pslices[j], cfg, bt, x, pos, cslices[j], ekv)
+            x, c = _block_decode(pslices[j], cfg, bt, x, pos, cslices[j], ekv,
+                                 block_tables)
             newc.append(c)
         return x, tuple(newc)
 
@@ -602,7 +669,8 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache):
         if cfg.is_encoder_decoder:
             xkv = cache["xkv_rem"][j]
             ekv = (xkv["k"], xkv["v"])
-        x, c2 = _block_decode(bp, cfg, bt, x, pos, cache["rem"][j], ekv)
+        x, c2 = _block_decode(bp, cfg, bt, x, pos, cache["rem"][j], ekv,
+                              block_tables)
         new_rem.append(c2)
 
     new_cache = {"stack": new_stack, "rem": tuple(new_rem)}

@@ -17,6 +17,7 @@ from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _map_batched(cache: Dict[str, Any], fn_stack, fn_rem):
@@ -112,6 +113,133 @@ def per_request_bytes(cfg, rows_pos: Dict[Any, tuple], max_seq: int
     ``used_cache_bytes`` accounting."""
     return {rid: used_cache_bytes(cfg, r, p, max_seq)
             for rid, (r, p) in rows_pos.items()}
+
+
+# ----------------------------------------------------------- paged pool
+#
+# DESIGN.md §5: the paged scheduler replaces the contiguous (rows,
+# max_seq) reservation with fixed-size pages handed out from a free
+# list. Freeing a pruned branch returns its pages immediately — no
+# gather/compaction on the scheduler path — and admission is counted in
+# pages, so rows of different lengths share the pool.
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for the shared device page pool.
+
+    ``num_pages`` allocatable physical pages of ``page_size`` token slots
+    each; physical index ``num_pages`` is the shared *trash* page (the
+    device pool is allocated with one extra page). Block tables are
+    (rows, max_pages) int32 in *device form*: owned logical pages map to
+    real physical pages, everything else aliases the trash page, so
+    attention validity stays purely positional (kv_pos <= pos)."""
+
+    def __init__(self, num_pages: int, page_size: int, rows: int,
+                 max_pages: int):
+        if num_pages < 1:
+            raise ValueError("need at least one allocatable page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.trash = num_pages
+        self.rows = rows
+        self.max_pages = max_pages
+        self.free_pages: List[int] = list(range(num_pages))
+        self.block = np.full((rows, max_pages), self.trash, np.int32)
+        self.owned = np.zeros((rows,), np.int32)
+
+    # ------------------------------------------------------------ queries
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` positions of one row."""
+        return -(-int(n_tokens) // self.page_size)
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free_pages)
+
+    @property
+    def used_count(self) -> int:
+        return self.num_pages - len(self.free_pages)
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return len(self.free_pages) >= n_pages
+
+    # ---------------------------------------------------------- lifecycle
+
+    def alloc_row(self, row: int, n_pages: int) -> np.ndarray:
+        """Hand ``n_pages`` pages to ``row``; returns the physical ids."""
+        if self.owned[row]:
+            raise ValueError(f"row {row} already owns {self.owned[row]} pages")
+        if n_pages > self.max_pages:
+            raise ValueError(f"{n_pages} pages > max_pages={self.max_pages}")
+        if not self.can_alloc(n_pages):
+            raise ValueError(f"out of pages: need {n_pages}, "
+                             f"free {len(self.free_pages)}")
+        pages = np.array(self.free_pages[:n_pages], np.int32)
+        del self.free_pages[:n_pages]
+        self.block[row, :n_pages] = pages
+        self.block[row, n_pages:] = self.trash
+        self.owned[row] = n_pages
+        return pages
+
+    def free_row(self, row: int) -> None:
+        """Return every page ``row`` owns to the free list."""
+        n = int(self.owned[row])
+        if n:
+            self.free_pages.extend(int(p) for p in self.block[row, :n])
+            self.free_pages.sort()
+        self.block[row] = self.trash
+        self.owned[row] = 0
+
+
+def _map_layer_entries(cfg, cache: Dict[str, Any], other: Dict[str, Any],
+                       fn) -> Dict[str, Any]:
+    """Map ``fn(block_type, is_stack, entry, other_entry)`` over per-layer
+    cache entries (cross-attn K/V entries get block_type "xkv")."""
+    pattern = cfg.layer_pattern
+    P = len(pattern)
+    out = {
+        "stack": tuple(fn(pattern[j], True, e, o) for j, (e, o)
+                       in enumerate(zip(cache["stack"], other["stack"]))),
+        "rem": tuple(fn(pattern[j % P], False, e, o) for j, (e, o)
+                     in enumerate(zip(cache["rem"], other["rem"]))),
+    }
+    if "xkv_stack" in cache:
+        out["xkv_stack"] = tuple(fn("xkv", True, e, o) for e, o
+                                 in zip(cache["xkv_stack"], other["xkv_stack"]))
+        out["xkv_rem"] = tuple(fn("xkv", False, e, o) for e, o
+                               in zip(cache["xkv_rem"], other["xkv_rem"]))
+    return out
+
+
+def install_paged(cfg, pool, row_idx, phys_flat, sub, page_size: int):
+    """Install a freshly prefilled contiguous sub-cache into the paged
+    pool — the paged analogue of :func:`scatter_batch`.
+
+    ``row_idx``: (n,) pool row slots receiving the request's branches.
+    ``phys_flat``: (n * max_pages,) physical page per (row, logical page),
+    trash-aliased for unowned logical pages. Global-attention leaves
+    scatter page-wise (the sub-cache's sequence axis is reshaped to
+    (max_pages, page_size) and written through the page list; duplicate
+    trash writes are garbage-on-garbage). Every per-row leaf family
+    (ring, recurrent, rwkv6, cross-KV) scatters into the row slots."""
+    def per_entry(bt, is_stack, entry, sub_entry):
+        if bt == "global":
+            def leaf(a, b):
+                if is_stack:           # a: (K, P+1, ps, ...), b: (K, n, S, ...)
+                    K, n, S = b.shape[0], b.shape[1], b.shape[2]
+                    br = b.reshape((K, n * (S // page_size), page_size)
+                                   + b.shape[3:])
+                    return a.at[:, phys_flat].set(br.astype(a.dtype))
+                n, S = b.shape[0], b.shape[1]
+                br = b.reshape((n * (S // page_size), page_size) + b.shape[2:])
+                return a.at[phys_flat].set(br.astype(a.dtype))
+            return jax.tree.map(leaf, entry, sub_entry)
+        def leaf_row(a, b):
+            return a.at[:, row_idx].set(b) if is_stack else a.at[row_idx].set(b)
+        return jax.tree.map(leaf_row, entry, sub_entry)
+
+    return _map_layer_entries(cfg, pool, sub, per_entry)
 
 
 def bucket_chain(n: int) -> List[int]:

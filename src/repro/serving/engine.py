@@ -87,7 +87,7 @@ def _decode_loop(params, cfg: ModelConfig, kcfg: KappaConfig,
     while not rs.finished:
         logits, cache = _model_step(params, cfg, jnp.asarray(rs.cur),
                                     jnp.int32(rs.pos), cache)
-        dec = rs.advance(logits)
+        dec = rs.sample_and_advance(logits)
         if dec.keep is not None:
             cache = cache_lib.gather_batch(cache, jnp.asarray(dec.keep))
     return rs.result()

@@ -1,6 +1,19 @@
 """Jittable sampling: temperature + top-k + top-p (paper §4.1:
-T=0.7, k=20, p=0.95)."""
+T=0.7, k=20, p=0.95).
+
+Two batching regimes:
+  * :func:`sample` — one RNG key for a whole (B, V) batch (lockstep
+    branches of a single request; the paper's setting).
+  * :func:`sample_rows` — one key *per row*. This is what lets the
+    continuous-batching scheduler sample every active request's rows in
+    ONE fused dispatch per tick: rows belong to different requests with
+    different RNG streams, so each row carries its own key, and a vmap
+    over rows is bitwise identical to sampling each request separately
+    (the scheduler/engine equivalence guarantee).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -31,13 +44,48 @@ def greedy(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-_argmax = greedy
+def _picked_lp(logits, tokens):
+    """(B,) log-prob of each row's picked token (fp32 softmax)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tokens[:, None], axis=-1)[:, 0]
 
 
-def sample_step(rng, logits, kcfg, *, greedy: bool = False):
-    """One sampling step under a KappaConfig's sampling hyperparameters.
-    ``greedy=True`` forces argmax (the greedy strategy's row)."""
-    if greedy:
-        return _argmax(logits)
-    return sample(rng, logits, temperature=kcfg.temperature,
-                  top_k=kcfg.top_k, top_p=kcfg.top_p)
+picked_logprob = jax.jit(_picked_lp)
+
+
+def sample_rows(keys, logits, greedy_mask, kcfg, *, want_picked_lp=False):
+    """Per-row-keyed sampling — ONE device dispatch for any mix of rows.
+
+    keys: (R,) PRNG keys (one per row; rows of the same request share a
+        split of that request's stream). logits: (R, V). greedy_mask:
+        (R,) bool — True rows take argmax and ignore their key.
+    Returns (R,) int32 tokens; with ``want_picked_lp`` a
+    ((R,) tokens, (R,) picked-token log-prob) pair from the same fused
+    dispatch (BoN-style strategies consume the log-prob, so the
+    scheduler gets both for one kernel launch and one transfer).
+
+    vmap over rows with per-row keys means row i's token depends only on
+    (keys[i], logits[i]) — independent of R or which other rows ride in
+    the batch. The scheduler exploits this to fuse all active requests
+    into one call per tick while staying token-for-token equivalent to
+    sequential serving."""
+    # jit keyed on the sampling hyperparameters only — NOT the whole
+    # kcfg, which would retrace for every per-request max_new override
+    return _sample_rows(keys, logits, greedy_mask,
+                        temperature=kcfg.temperature, top_k=kcfg.top_k,
+                        top_p=kcfg.top_p, want_lp=want_picked_lp)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("temperature", "top_k", "top_p",
+                                    "want_lp"))
+def _sample_rows(keys, logits, greedy_mask, *, temperature, top_k, top_p,
+                 want_lp):
+    def one(key, row, g):
+        s = sample(key, row[None], temperature=temperature,
+                   top_k=top_k, top_p=top_p)[0]
+        return jnp.where(g, jnp.argmax(row).astype(jnp.int32), s)
+    toks = jax.vmap(one)(keys, logits, greedy_mask)
+    if not want_lp:
+        return toks
+    return toks, _picked_lp(logits, toks)

@@ -1,32 +1,47 @@
-"""Continuous-batching multi-request scheduler (DESIGN.md §4).
+"""Continuous-batching multi-request schedulers (DESIGN.md §4–§5).
 
 The sequential engine serves one prompt at a time: N branch rows, pruned
 to 1 by KAPPA/ST-BoN, then a long single-row tail to EOS — poor device
-utilization exactly when pruning succeeds. This scheduler turns freed
-rows into throughput, the serving-level payoff the early-pruning papers
-point at (ST-BoN, Wang et al. 2025; Bi et al. 2025):
+utilization exactly when pruning succeeds. These schedulers turn freed
+capacity into throughput, the serving-level payoff the early-pruning
+papers point at (ST-BoN, Wang et al. 2025; Bi et al. 2025). Two pool
+backends share one driver:
 
-  * a fixed ``(rows, max_seq)`` device cache pool allocated once — one
-    compiled decode shape, no per-request recompilation;
-  * a FIFO request queue; a request is admitted when its branch fan-out
-    fits in the free slots (prefill at batch 1, broadcast to N rows,
-    scattered into the slots);
-  * one fused decode step per tick over the *whole* pool with per-row
-    positions (rows of different requests sit at different offsets);
-  * per-request strategies (repro.serving.strategies) drive sampling,
-    controller updates and pruning on their own row groups; compaction
-    frees slots which are immediately backfilled by queued prefills;
+  * :class:`ContinuousBatchingScheduler` — PR 1's contiguous
+    ``(rows, max_seq)`` device pool with FIFO admission counted in rows.
+    Every row reserves (and streams through attention) ``max_seq`` KV
+    slots regardless of the request's actual length.
+  * :class:`PagedScheduler` — a paged KV pool (DESIGN.md §5): global
+    attention layers share a page pool, rows hold ``(max_pages,)`` block
+    tables, admission is counted in *pages* sized to each request's own
+    ``prompt + max_new`` need, pruning returns pages to the free list
+    the moment it happens, and queued requests are admitted
+    shortest-job-first among those that fit.
+
+Shared driver behaviour per tick:
+
+  * admit whatever the backend's policy allows (prefill at batch 1,
+    broadcast to N rows, scatter/install into free row slots);
+  * one fused decode step over the whole pool with per-row positions;
+  * ONE fused sampler dispatch for every active request's rows
+    (per-row RNG keys — :func:`repro.serving.sampler.sample_rows`)
+    instead of a per-request ``sample_step`` call;
+  * per-request strategies (repro.serving.strategies) drive controller
+    updates and pruning on their own row groups; freed capacity is
+    backfilled by queued prefills on the next tick;
   * per-request ``GenResult``s emitted on completion with the same
     accounting as sequential serving.
 
 Equivalence guarantee: the batched decode step is row-independent, the
-host-side per-request logic is shared verbatim with the engine loop, and
-each request consumes its own RNG stream — so with the same per-request
-keys and the same ``max_seq`` the scheduler reproduces the sequential
-engine token for token (tests/test_scheduler.py).
+per-row-keyed sampler is row-independent, and the host-side per-request
+logic is shared verbatim with the engine loop — so with the same
+per-request keys and the same ``max_seq`` both schedulers reproduce the
+sequential engine token for token (tests/test_scheduler.py,
+tests/test_paged.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
@@ -36,33 +51,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import KappaConfig, ModelConfig
-from repro.models import init_cache
+from repro.models import decode_step, init_cache, init_paged_cache
 from repro.serving import cache as cache_lib
 from repro.serving import engine
+from repro.serving import sampler
 from repro.serving import strategies
 from repro.serving.strategies import GenResult
 
 _scatter = jax.jit(cache_lib.scatter_batch, donate_argnums=(0,))
+_install_paged = jax.jit(cache_lib.install_paged,
+                         static_argnums=(0, 5), donate_argnums=(1,))
+_paged_step = jax.jit(decode_step, static_argnums=(1,), donate_argnums=(4,))
 
 
-class ContinuousBatchingScheduler:
-    """Admit prompts into a fixed row pool and decode them concurrently.
+@dataclasses.dataclass
+class _Queued:
+    rid: int
+    prompt: np.ndarray
+    rng: object
+    kcfg: KappaConfig          # per-request (max_new may be overridden)
+    need: int                  # prompt + n_prefix + max_new token slots
+    fan_out: int
 
-    Parameters
-    ----------
-    rows : total branch slots in the device pool. Must be >= the fan-out
-        of a single request (``strategy.rows(kcfg)``).
-    max_seq : shared sequence capacity of every pool row. Each admitted
-        prompt must satisfy ``len(prompt) + n_prefix + max_new <= max_seq``.
-    method : one of "greedy" | "bon" | "stbon" | "kappa"; or pass
-        ``strategy_factory`` for custom construction (e.g. ST-BoN with a
-        non-default buffer window).
-    """
+
+class _SchedulerBase:
+    """Queue + row-slot lifecycle + fused tick, independent of how KV
+    storage is reserved. Subclasses implement the storage policy."""
 
     def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
                  rows: int, max_seq: int, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
-                 strategy_factory: Optional[Callable[[], strategies.DecodeStrategy]] = None):
+                 strategy_factory: Optional[Callable[[], strategies.DecodeStrategy]] = None,
+                 fused_sampling: bool = True):
         self.params = params
         self.cfg = cfg
         self.kcfg = kcfg
@@ -73,6 +93,10 @@ class ContinuousBatchingScheduler:
         self.frontend = frontend
         self.strategy_factory = strategy_factory or (
             lambda: strategies.make_strategy(method))
+        # False = PR 1 dispatch pattern (one sample_step call + host sync
+        # per request per tick) — kept as a benchmark baseline; tokens
+        # are identical either way (sample_rows is row-independent)
+        self.fused_sampling = fused_sampling
         self.n_prefix = engine._n_prefix(cfg)
 
         need = self.strategy_factory().rows(kcfg)
@@ -89,65 +113,97 @@ class ContinuousBatchingScheduler:
                 "(cfg.moe_capacity_factor <= 0): capacity-limited dispatch "
                 "couples pool rows across requests")
 
-        self.pool = init_cache(cfg, rows, max_seq)
         self.row_token = np.zeros((rows,), np.int32)
         self.row_pos = np.zeros((rows,), np.int32)
         self.free: List[int] = list(range(rows))
-        self.queue: deque = deque()          # (rid, prompt, rng)
+        self.queue: deque = deque()          # _Queued items
         self.active: Dict[int, tuple] = {}   # rid -> (RequestState, slots)
+        self._slots_dev: Dict[int, object] = {}  # rid -> device slot idx
         self.results: Dict[int, GenResult] = {}
         self._next_rid = 0
         self.ticks = 0
         self._occupied_ticks = 0             # Σ occupied rows over ticks
 
+    # ----------------------------------------------------- storage hooks
+
+    def _check_servable(self, item: _Queued) -> None:
+        """Raise if the request can never be admitted."""
+
+    def _admissible(self, item: _Queued) -> bool:
+        """Whether the request fits the free capacity right now."""
+        raise NotImplementedError
+
+    def _select_admit(self) -> Optional[int]:
+        """Queue index to admit next, or None. Defines the policy."""
+        raise NotImplementedError
+
+    def _install(self, slots: List[int], item: _Queued, sub) -> None:
+        """Write a broadcast prefilled sub-cache into the row slots."""
+        raise NotImplementedError
+
+    def _release_storage(self, slots: List[int]) -> None:
+        """Return the slots' KV reservation (pages / nothing extra)."""
+
+    def _decode_tick(self):
+        """One fused model step over the pool; returns pool logits."""
+        raise NotImplementedError
+
     # ------------------------------------------------------------ submit
 
-    def submit(self, prompt: np.ndarray, rng) -> int:
-        """Queue one prompt with its own RNG stream; returns request id."""
-        need = len(prompt) + self.n_prefix + self.kcfg.max_new_tokens
+    def submit(self, prompt: np.ndarray, rng, *,
+               max_new: Optional[int] = None) -> int:
+        """Queue one prompt with its own RNG stream; returns request id.
+        ``max_new`` overrides ``kcfg.max_new_tokens`` for this request
+        (mixed-length serving — the paged pool sizes its reservation to
+        the request's own need)."""
+        kcfg = self.kcfg if max_new is None else dataclasses.replace(
+            self.kcfg, max_new_tokens=max_new)
+        need = len(prompt) + self.n_prefix + kcfg.max_new_tokens
         if need > self.max_seq:
             raise ValueError(
                 f"prompt needs {need} positions > pool max_seq={self.max_seq}")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append((rid, np.asarray(prompt), rng))
+        item = _Queued(rid, np.asarray(prompt), rng, kcfg, need,
+                       self.strategy_factory().rows(kcfg))
+        self._check_servable(item)
+        self.queue.append(item)
         return rid
 
     # --------------------------------------------------------- admission
 
-    def _try_admit(self) -> bool:
-        """Admit the queue head if its fan-out fits the free slots
-        (FIFO — no head-of-line bypass, keeping completion order fair)."""
-        if not self.queue:
+    def _admit_one(self) -> bool:
+        idx = self._select_admit()
+        if idx is None:
             return False
-        rid, prompt, rng = self.queue[0]
-        strategy = self.strategy_factory()
-        n = strategy.rows(self.kcfg)
-        if len(self.free) < n:
-            return False
-        self.queue.popleft()
+        item = self.queue[idx]
+        del self.queue[idx]
+        n = item.fan_out
         slots = sorted(self.free[:n])
         del self.free[:n]
 
         pf_logits, cache1 = engine._prefill_one(
-            self.params, self.cfg, prompt, self.max_seq, self.frontend)
+            self.params, self.cfg, item.prompt, self.max_seq, self.frontend)
         rs = strategies.RequestState(
-            strategy, self.params, self.cfg, self.kcfg, len(prompt), rng,
-            eos_id=self.eos_id, bos_id=self.bos_id, max_seq=self.max_seq,
+            self.strategy_factory(), self.params, self.cfg, item.kcfg,
+            len(item.prompt), item.rng, eos_id=self.eos_id,
+            bos_id=self.bos_id, max_seq=self.max_seq,
             n_prefix=self.n_prefix, frontend=self.frontend)
         sub = cache_lib.broadcast_batch(cache1, n) if n > 1 else cache1
-        self.pool = _scatter(self.pool, jnp.asarray(slots), sub)
+        self._install(slots, item, sub)
         rs.first_tokens(pf_logits)
         if rs.finished:  # e.g. greedy whose first token is already EOS
-            self.results[rid] = rs.result()
+            self.results[item.rid] = rs.result()
             self._release(slots)
         else:
-            self.active[rid] = (rs, slots)
+            self.active[item.rid] = (rs, slots)
+            self._slots_dev[item.rid] = jnp.asarray(slots)
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
         return True
 
     def _release(self, slots: List[int]) -> None:
+        self._release_storage(slots)
         self.row_token[slots] = 0
         self.row_pos[slots] = 0
         self.free.extend(slots)
@@ -156,31 +212,69 @@ class ContinuousBatchingScheduler:
     # -------------------------------------------------------------- tick
 
     def tick(self) -> None:
-        """Admit what fits, then run one fused decode step over the pool
-        and advance every active request on its own rows."""
-        while self._try_admit():
+        """Admit what fits, run one fused decode step over the pool, one
+        fused sampler dispatch over all active rows, then advance every
+        active request on its own rows."""
+        while self._admit_one():
             pass
         if not self.active:
             return
         self._occupied_ticks += self.rows - len(self.free)
 
-        logits, self.pool = engine._model_step(
-            self.params, self.cfg, jnp.asarray(self.row_token),
-            jnp.asarray(self.row_pos), self.pool)
+        logits = self._decode_tick()
+
+        toks = picked = None
+        if self.fused_sampling:
+            # one fused per-row-keyed sampling dispatch for the whole
+            # pool; free rows ride along as masked argmax (ignored)
+            keys = np.zeros((self.rows, 2), np.uint32)
+            gmask = np.ones((self.rows,), bool)
+            want_lp = False
+            key_devs = {}
+            for rid, (rs, slots) in self.active.items():
+                key_devs[rid] = rs.step_keys()   # device splits, no sync
+                gmask[slots] = rs.strategy.greedy
+                want_lp |= rs.strategy.wants_picked_lp
+            key_np = jax.device_get(key_devs)    # one blocking transfer
+            for rid, (rs, slots) in self.active.items():
+                keys[slots] = key_np[rid]
+            if want_lp:
+                # picked-token log-probs fused into the sampling dispatch
+                # so BoN-style strategies do zero device work per request
+                toks, picked = jax.device_get(sampler.sample_rows(
+                    jnp.asarray(keys), logits, jnp.asarray(gmask),
+                    self.kcfg, want_picked_lp=True))
+            else:
+                toks = np.asarray(sampler.sample_rows(
+                    jnp.asarray(keys), logits, jnp.asarray(gmask),
+                    self.kcfg))
 
         for rid in list(self.active):
             rs, slots = self.active[rid]
-            dec = rs.advance(logits[jnp.asarray(slots)])
+            if toks is None:
+                dec = rs.sample_and_advance(logits[self._slots_dev[rid]])
+            else:
+                lp = picked[slots] if (picked is not None
+                                       and rs.strategy.wants_picked_lp) else None
+                # skip the per-request device gather when the strategy
+                # won't read the logits (greedy; BoN once lp is fused)
+                if rs.strategy.needs_step_logits and lp is None:
+                    req_logits = logits[self._slots_dev[rid]]
+                else:
+                    req_logits = None
+                dec = rs.advance(req_logits, toks[slots], picked_lp=lp)
             if dec.keep is not None:
                 kept = [slots[i] for i in dec.keep]
                 self._release(sorted(set(slots) - set(kept)))
                 slots = kept
                 self.active[rid] = (rs, slots)
+                self._slots_dev[rid] = jnp.asarray(slots)
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
             if rs.finished:
                 self.results[rid] = rs.result()
                 del self.active[rid]
+                self._slots_dev.pop(rid, None)
                 self._release(slots)
         self.ticks += 1
 
@@ -225,3 +319,155 @@ class ContinuousBatchingScheduler:
             "row_utilization": (self._occupied_ticks
                                 / max(self.ticks * self.rows, 1)),
         }
+
+
+class ContinuousBatchingScheduler(_SchedulerBase):
+    """Contiguous-pool scheduler: a fixed ``(rows, max_seq)`` device
+    cache allocated once, FIFO admission counted in rows (no head-of-line
+    bypass, keeping completion order fair). Every admitted row reserves
+    ``max_seq`` KV slots for its whole life — the reservation slack the
+    paged backend removes.
+
+    Parameters
+    ----------
+    rows : total branch slots in the device pool. Must be >= the fan-out
+        of a single request (``strategy.rows(kcfg)``).
+    max_seq : shared sequence capacity of every pool row. Each admitted
+        prompt must satisfy ``len(prompt) + n_prefix + max_new <= max_seq``.
+    method : one of "greedy" | "bon" | "stbon" | "kappa"; or pass
+        ``strategy_factory`` for custom construction (e.g. ST-BoN with a
+        non-default buffer window).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
+                 rows: int, max_seq: int, method: str = "kappa",
+                 eos_id: int, bos_id: int = 0, frontend=None,
+                 strategy_factory=None, fused_sampling: bool = True):
+        super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
+                         method=method, eos_id=eos_id, bos_id=bos_id,
+                         frontend=frontend, strategy_factory=strategy_factory,
+                         fused_sampling=fused_sampling)
+        self.pool = init_cache(cfg, rows, max_seq)
+
+    def _admissible(self, item: _Queued) -> bool:
+        return len(self.free) >= item.fan_out
+
+    def _select_admit(self) -> Optional[int]:
+        # FIFO: admit the head or nothing
+        if self.queue and self._admissible(self.queue[0]):
+            return 0
+        return None
+
+    def _install(self, slots, item, sub) -> None:
+        self.pool = _scatter(self.pool, jnp.asarray(slots), sub)
+
+    def _decode_tick(self):
+        logits, self.pool = engine._model_step(
+            self.params, self.cfg, jnp.asarray(self.row_token),
+            jnp.asarray(self.row_pos), self.pool)
+        return logits
+
+
+class PagedScheduler(_SchedulerBase):
+    """Paged-pool scheduler (DESIGN.md §5).
+
+    Global-attention KV lives in a shared page pool; each row addresses
+    it through a ``(max_pages,)`` block table. Admission reserves
+    ``fan_out × ceil(need / page_size)`` pages where ``need`` is the
+    request's own ``prompt + max_new`` — not the pool-wide ``max_seq`` —
+    and queued requests are admitted shortest-job-first among those whose
+    rows *and* pages fit (FIFO tie-break on equal need). Pruning a branch
+    returns its pages to the free list immediately; there is no
+    gather/compaction on this path.
+
+    Parameters
+    ----------
+    rows : row slots (block tables / position vector entries).
+    max_seq : upper bound on any request's ``prompt + n_prefix + max_new``
+        (rounded up to a page multiple internally).
+    page_size : token slots per page. On TPU this should match the
+        flash-decode kernel's S-tile so one page = one VMEM tile DMA.
+    num_pages : allocatable pages in the pool — the real memory knob.
+        Defaults to ``rows * max_seq / page_size`` (no page pressure);
+        set lower to serve more rows than a contiguous pool of the same
+        byte budget could.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
+                 rows: int, max_seq: int, page_size: int = 64,
+                 num_pages: Optional[int] = None, method: str = "kappa",
+                 eos_id: int, bos_id: int = 0, frontend=None,
+                 strategy_factory=None, fused_sampling: bool = True):
+        max_seq = -(-max_seq // page_size) * page_size
+        super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
+                         method=method, eos_id=eos_id, bos_id=bos_id,
+                         frontend=frontend, strategy_factory=strategy_factory,
+                         fused_sampling=fused_sampling)
+        self.page_size = page_size
+        self.max_pages = max_seq // page_size
+        self.num_pages = num_pages if num_pages is not None \
+            else rows * self.max_pages
+        self.alloc = cache_lib.PageAllocator(self.num_pages, page_size,
+                                             rows, self.max_pages)
+        self.pool = init_paged_cache(cfg, rows, self.num_pages, page_size,
+                                     max_seq)
+        self._page_ticks = 0                 # Σ pages in use over ticks
+        self._bt_dev = None                  # device block tables (cached)
+
+    # ----------------------------------------------------------- storage
+
+    def _pages_per_row(self, item: _Queued) -> int:
+        return self.alloc.pages_for(item.need)
+
+    def _check_servable(self, item: _Queued) -> None:
+        total = item.fan_out * self._pages_per_row(item)
+        if total > self.num_pages:
+            raise ValueError(
+                f"request needs {total} pages > pool num_pages="
+                f"{self.num_pages} (page_size={self.page_size})")
+
+    def _admissible(self, item: _Queued) -> bool:
+        return (len(self.free) >= item.fan_out
+                and self.alloc.can_alloc(item.fan_out
+                                         * self._pages_per_row(item)))
+
+    def _select_admit(self) -> Optional[int]:
+        # shortest-job-first among fitting requests, FIFO tie-break
+        best, best_need = None, None
+        for i, item in enumerate(self.queue):
+            if self._admissible(item) and (best is None
+                                           or item.need < best_need):
+                best, best_need = i, item.need
+        return best
+
+    def _install(self, slots, item, sub) -> None:
+        pages = self._pages_per_row(item)
+        for s in slots:
+            self.alloc.alloc_row(s, pages)
+        self._bt_dev = None
+        phys_flat = jnp.asarray(self.alloc.block[slots].reshape(-1))
+        self.pool = _install_paged(self.cfg, self.pool,
+                                   jnp.asarray(slots), phys_flat, sub,
+                                   self.page_size)
+
+    def _release_storage(self, slots) -> None:
+        for s in slots:
+            self.alloc.free_row(s)
+        self._bt_dev = None
+
+    def _decode_tick(self):
+        self._page_ticks += self.alloc.used_count
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self.alloc.block)
+        logits, self.pool = _paged_step(
+            self.params, self.cfg, jnp.asarray(self.row_token),
+            jnp.asarray(self.row_pos), self.pool, self._bt_dev)
+        return logits
+
+    # ----------------------------------------------------------- metrics
+
+    def throughput(self) -> Dict[str, float]:
+        out = super().throughput()
+        out["page_utilization"] = (self._page_ticks
+                                   / max(self.ticks * self.num_pages, 1))
+        return out

@@ -83,6 +83,13 @@ def _bos_log_q(params, cfg: ModelConfig, bos_token, frontend=None):
 _kappa_controller = jax.jit(kappa_lib.kappa_step, static_argnums=(4,))
 
 
+# device-side picked-token log-prob: only the (N,) vector crosses to
+# host, not the full (N, V) softmax (the BoN per-step round-trip fix).
+# One definition shared with the fused sampler dispatch so the BoN
+# single-request path and the scheduler's fused path can never diverge.
+_picked_logprob = sampler.picked_logprob
+
+
 # ------------------------------------------------------------- strategies
 
 class DecodeStrategy:
@@ -91,6 +98,13 @@ class DecodeStrategy:
 
     name = "base"
     greedy = False  # argmax sampling instead of temperature sampling
+    # strategy consumes the picked-token log-prob each step; the
+    # scheduler then computes it for ALL rows in one fused per-tick
+    # dispatch and hands each request its slice (see RequestState.advance)
+    wants_picked_lp = False
+    # strategy reads the raw per-step logits in step() — False lets the
+    # scheduler skip the per-request device gather entirely
+    needs_step_logits = True
 
     def rows(self, kcfg: KappaConfig) -> int:
         return kcfg.num_branches
@@ -107,7 +121,8 @@ class DecodeStrategy:
 
     def step(self, logits, in_tokens: np.ndarray, out_tokens: np.ndarray,
              branch_ids: np.ndarray, done: np.ndarray,
-             done_prev: np.ndarray, step_idx: int) -> StepDecision:
+             done_prev: np.ndarray, step_idx: int,
+             picked_lp: Optional[np.ndarray] = None) -> StepDecision:
         raise NotImplementedError
 
     def choose(self, branch_ids: np.ndarray, done: np.ndarray) -> int:
@@ -122,6 +137,7 @@ class GreedyStrategy(DecodeStrategy):
 
     name = "greedy"
     greedy = True
+    needs_step_logits = False
 
     def rows(self, kcfg: KappaConfig) -> int:
         return 1
@@ -130,7 +146,7 @@ class GreedyStrategy(DecodeStrategy):
         return tokens0 == eos_id
 
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
-             done_prev, step_idx):
+             done_prev, step_idx, picked_lp=None):
         # the EOS token itself is logged/counted (emitted before done)
         return StepDecision(counted=~done_prev,
                             stop=bool(done[branch_ids[0]]))
@@ -141,6 +157,7 @@ class BoNStrategy(DecodeStrategy):
     2025): every branch decodes to EOS, keep the most likely one."""
 
     name = "bon"
+    wants_picked_lp = True
 
     def begin(self, params, cfg, kcfg, *, bos_id, frontend=None):
         super().begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
@@ -149,20 +166,27 @@ class BoNStrategy(DecodeStrategy):
         self.count = np.zeros((n,), np.int64)
 
     def observe_prefill(self, logits0, tokens0):
-        lp = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
-        picked = jnp.take_along_axis(lp, jnp.asarray(tokens0)[:, None], axis=-1)
-        self.sum_lp += np.asarray(picked[:, 0], np.float64)
+        picked = _picked_logprob(logits0, jnp.asarray(tokens0))
+        self.sum_lp += np.asarray(picked, np.float64)
         self.count += 1
 
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
-             done_prev, step_idx):
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        picked = jnp.take_along_axis(lp, jnp.asarray(out_tokens)[:, None], axis=-1)
-        step_lp = np.asarray(picked[:, 0], np.float64)
+             done_prev, step_idx, picked_lp=None):
+        if picked_lp is None:  # single-request path: own (N,) extraction
+            picked_lp = np.asarray(
+                _picked_logprob(logits, jnp.asarray(out_tokens)))
+        step_lp = np.asarray(picked_lp, np.float64)
         newly = ~done_prev  # a branch's own EOS step still counts toward ppl
-        self.sum_lp += np.where(newly, step_lp, 0.0)
-        self.count += newly
-        return StepDecision(counted=newly, stop=bool(np.all(done)))
+        # index by branch id: after eager release the step arrays cover
+        # only surviving rows, while sum_lp/count stay full fan-out
+        self.sum_lp[branch_ids] += np.where(newly, step_lp, 0.0)
+        self.count[branch_ids] += newly
+        # release EOS'd branches eagerly: a done branch contributes
+        # nothing further to its perplexity, so its rows (and KV pages)
+        # go back to the pool instead of decoding dead tokens to the end
+        alive = ~done[branch_ids]
+        keep = np.where(alive)[0] if alive.any() and not alive.all() else None
+        return StepDecision(counted=newly, keep=keep, stop=bool(np.all(done)))
 
     def choose(self, branch_ids, done):
         return int(np.argmax(self._neg_ppl()))
@@ -200,7 +224,7 @@ class STBoNStrategy(DecodeStrategy):
         self.truncated = False
 
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
-             done_prev, step_idx):
+             done_prev, step_idx, picked_lp=None):
         kcfg = self.kcfg
         n = kcfg.num_branches
         keep = None
@@ -245,7 +269,7 @@ class KappaStrategy(DecodeStrategy):
         self.chain = cache_lib.bucket_chain(kcfg.num_branches)
 
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
-             done_prev, step_idx):
+             done_prev, step_idx, picked_lp=None):
         kcfg = self.kcfg
         self.state = _kappa_controller(self.state, logits,
                                        jnp.asarray(in_tokens), self.log_q, kcfg)
@@ -330,10 +354,10 @@ class RequestState:
 
     def first_tokens(self, pf_logits) -> np.ndarray:
         """Sample the fan-out tokens from the prefill logits."""
-        self.rng, k0 = jax.random.split(self.rng)
+        keys0 = self.step_keys()
         logits0 = jnp.broadcast_to(pf_logits, (self.n, pf_logits.shape[-1]))
-        cur = sampler.sample_step(k0, logits0, self.kcfg,
-                                  greedy=self.strategy.greedy)
+        cur = sampler.sample_rows(keys0, logits0, self._greedy_mask(self.n),
+                                  self.kcfg)
         self.cur = np.asarray(cur)
         self.done = self.strategy.init_done(self.cur, self.eos_id)
         self.strategy.observe_prefill(logits0, self.cur)
@@ -344,36 +368,83 @@ class RequestState:
             self.finished = True
         return self.cur
 
-    def advance(self, logits) -> StepDecision:
-        """Host-side work for one decode step given this request's
-        per-branch logits. The caller must apply ``decision.keep`` to
-        its cache rows."""
+    def step_keys(self):
+        """Advance this request's RNG stream and derive one sampling key
+        per live row. The scheduler gathers these across requests into a
+        single fused :func:`repro.serving.sampler.sample_rows` dispatch;
+        the engine loop uses them via :meth:`sample_and_advance`. Both
+        consume the stream identically, so tokens match across modes.
+
+        Returned keys are always raw (n, 2) uint32 key data — new-style
+        *threefry* typed keys (``jax.random.key``'s default impl) are
+        unwrapped so the scheduler's pooled key buffer works for either
+        flavor the caller submitted. Wider key impls (e.g. rbg's 4-word
+        data) are rejected up front rather than silently misread."""
         self.rng, kk = jax.random.split(self.rng)
-        nxt = sampler.sample_step(kk, logits, self.kcfg,
-                                  greedy=self.strategy.greedy)
-        nxt_np = np.asarray(nxt)
+        keys = jax.random.split(kk, len(self.branch_ids))
+        if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+            keys = jax.random.key_data(keys)
+        if keys.shape[-1] != 2:
+            raise ValueError(
+                f"request RNG uses a {keys.shape[-1]}-word key impl; the "
+                "serving stack supports 2-word (threefry) keys only")
+        return keys
+
+    def _greedy_mask(self, n: int):
+        return jnp.full((n,), self.strategy.greedy)
+
+    def sample_and_advance(self, logits) -> StepDecision:
+        """Single-request path: one ``sample_rows`` dispatch for this
+        request's rows, then the shared host-side bookkeeping."""
+        keys = self.step_keys()
+        toks = sampler.sample_rows(keys, logits,
+                                   self._greedy_mask(len(self.branch_ids)),
+                                   self.kcfg)
+        return self.advance(logits, np.asarray(toks))
+
+    def advance(self, logits, tokens: np.ndarray,
+                picked_lp: Optional[np.ndarray] = None) -> StepDecision:
+        """Host-side work for one decode step given this request's
+        per-branch logits and pre-sampled next tokens (sampled with this
+        request's :meth:`step_keys`). ``picked_lp`` optionally carries the
+        picked-token log-probs when the scheduler already extracted them
+        for the whole pool in one dispatch (rows where ``done`` was
+        already set are never consumed, so the raw-token values are
+        fine). The caller must apply ``decision.keep`` to its cache
+        rows."""
+        nxt_np = np.asarray(tokens)
         done_prev = self.done[self.branch_ids].copy()
         nxt_np = np.where(done_prev, self.eos_id, nxt_np)
         self.done[self.branch_ids] |= (nxt_np == self.eos_id)
         self.pos += 1
         self.step += 1
         dec = self.strategy.step(logits, self.cur, nxt_np, self.branch_ids,
-                                 self.done, done_prev, self.step)
+                                 self.done, done_prev, self.step,
+                                 picked_lp=picked_lp)
         self.log.append(self.branch_ids, nxt_np, dec.counted)
         self.logical += int(np.sum(dec.counted))
         self.compute += len(self.branch_ids)
         self.cur = nxt_np
+        if dec.keep is not None and len(dec.keep) < len(self.branch_ids):
+            # bytes are monotone in pos at fixed row count, so the peak
+            # over a constant-rows stretch is its last step: sample it
+            # right before the rows shrink (and again in result()) —
+            # this keeps the per-step host path free of byte accounting
+            self._observe_peak()
         if dec.keep is not None:
             self.branch_ids = self.branch_ids[dec.keep]
             self.cur = self.cur[dec.keep]
             self.compactions.append(len(dec.keep))
-        self.peak = max(self.peak, cache_lib.used_cache_bytes(
-            self.cfg, len(self.branch_ids), self.pos, self.max_seq))
         if dec.stop or self.step >= self.kcfg.max_new_tokens - 1:
             self.finished = True
         return dec
 
+    def _observe_peak(self) -> None:
+        self.peak = max(self.peak, cache_lib.used_cache_bytes(
+            self.cfg, len(self.branch_ids), self.pos, self.max_seq))
+
     def result(self) -> GenResult:
+        self._observe_peak()
         chosen = self.strategy.choose(self.branch_ids, self.done)
         toks = self.log.buf[chosen, :self.log.len[chosen]]
         toks = toks[toks != -1].tolist()
