@@ -28,6 +28,14 @@ tokens/s at queue depth ≥ 8.
 Every mode decodes the same prompts with the same per-request RNG keys,
 so outputs are token-for-token identical (asserted) — the comparison is
 pure wall-clock.
+
+Each scheduler run also reports a per-tick wall-time breakdown (model
+step / sampler dispatch / pooled-controller dispatch / blocking sync /
+per-request host work) so controller-overhead regressions are visible:
+in the ``pr1`` mode every kappa request pays its own controller dispatch
++ host sync inside the advance loop (it shows up as ``host`` time),
+while the fused modes run ONE pooled controller dispatch per tick —
+asserted here via the scheduler's dispatch/sync counters.
 """
 from __future__ import annotations
 
@@ -70,6 +78,17 @@ def _prompts(depth: int):
 
 def _mixed_max_new(depth: int):
     return [MIXED_MAX_NEW[i % len(MIXED_MAX_NEW)] for i in range(depth)]
+
+
+BREAKDOWN_KEYS = ("model", "sampler", "controller", "sync", "host")
+
+
+def _tick_breakdown_us(tp):
+    """Per-tick µs spent in each scheduler tick phase. ``host`` absorbs
+    any UNPOOLED per-request controller dispatch + sync (the pr1 mode),
+    which is exactly the regression this breakdown makes visible."""
+    ticks = max(tp["ticks"], 1)
+    return {k: tp[f"time_{k}_s"] * 1e6 / ticks for k in BREAKDOWN_KEYS}
 
 
 def _run_sequential(cfg, params, kcfg, method, prompts, max_seq):
@@ -158,6 +177,7 @@ def run(cfg, params):
                 "row_utilization": tp["row_utilization"],
                 "ticks": tp["ticks"],
                 "seq_time_s": dt_s, "cb_time_s": tp["time_s"],
+                "tick_breakdown_us": _tick_breakdown_us(tp),
             })
 
     # ---- contiguous vs paged at equal KV token budget, mixed lengths.
@@ -220,6 +240,18 @@ def run(cfg, params):
             assert all(a.tokens == b.tokens == c.tokens
                        for a, b, c in zip(gens_1, gens_c, gens_p)), \
                 "paged/fused serving diverged from the PR 1 baseline"
+            if method == "kappa":
+                # batched-controller contract (the acceptance criterion):
+                # the fused modes make at most ONE controller dispatch
+                # and ONE controller-carrying blocking transfer per tick,
+                # no matter how many kappa requests are in flight
+                for mode in ("cont", "paged"):
+                    tp = tps[mode]
+                    assert tp["controller_dispatches"] <= tp["ticks"], \
+                        f"{mode}: {tp['controller_dispatches']} controller " \
+                        f"dispatches over {tp['ticks']} ticks"
+                    assert tp["controller_syncs"] == \
+                        tp["controller_dispatches"]
             out.append({
                 "kind": "paged", "method": method, "depth": depth,
                 "rows_contiguous": rows_pool, "rows_paged": rows_paged,
@@ -242,6 +274,10 @@ def run(cfg, params):
                 "pr1_time_s": tp_1["time_s"],
                 "contiguous_time_s": tp_c["time_s"],
                 "paged_time_s": tp_p["time_s"],
+                "pr1_tick_breakdown_us": _tick_breakdown_us(tp_1),
+                "paged_tick_breakdown_us": _tick_breakdown_us(tp_p),
+                "paged_controller_dispatches": tp_p["controller_dispatches"],
+                "paged_controller_syncs": tp_p["controller_syncs"],
             })
     return out
 
@@ -259,11 +295,15 @@ def emit_csv(rows):
         else:
             name = f"throughput/paged_{r['method']}_depth{r['depth']}"
             us = r["paged_time_s"] * 1e6 / max(r["paged_ticks"], 1)
+            bd1, bdp = r["pr1_tick_breakdown_us"], r["paged_tick_breakdown_us"]
             derived = (f"pr1_tok_s={r['pr1_tokens_per_s']:.1f};"
                        f"cont_tok_s={r['contiguous_tokens_per_s']:.1f};"
                        f"paged_tok_s={r['paged_tokens_per_s']:.1f};"
                        f"paged_speedup={r['paged_speedup']:.2f};"
-                       f"page_util={r['page_utilization']:.2f}")
+                       f"page_util={r['page_utilization']:.2f};"
+                       f"pr1_host_us={bd1['host']:.0f};"
+                       f"paged_host_us={bdp['host']:.0f};"
+                       f"paged_ctrl_us={bdp['controller']:.0f}")
         out.append(f"{name},{us:.1f},{derived}")
     return out
 
@@ -283,6 +323,15 @@ if __name__ == "__main__":
             verdict = "PASS" if r["speedup"] > 1.0 else "FAIL"
             print(f"# depth={depth}: continuous batching speedup "
                   f"{r['speedup']:.2f}x -> {verdict}")
+    for r in rows:
+        if r["kind"] == "paged" and r["method"] == "kappa":
+            bd1, bdp = r["pr1_tick_breakdown_us"], r["paged_tick_breakdown_us"]
+            print(f"# kappa depth={r['depth']}: per-tick controller cost "
+                  f"{bd1['host']:.0f}us host (pr1: one dispatch+sync per "
+                  f"request) -> {bdp['controller']:.0f}us pooled dispatch + "
+                  f"{bdp['host']:.0f}us host "
+                  f"({r['paged_controller_dispatches']} dispatches / "
+                  f"{r['paged_ticks']} ticks)")
     paged_rows = [r for r in rows if r["kind"] == "paged" and r["depth"] >= 8]
     for r in paged_rows:
         print(f"# {r['method']} depth={r['depth']}: paged+fused vs PR1 "

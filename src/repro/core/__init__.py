@@ -1,12 +1,16 @@
 from repro.core.kappa import (
     KappaState,
     compact_state,
+    init_pool,
+    init_pool_rows,
     init_state,
     kappa_step,
     num_alive,
+    pooled_step,
     survivor_index,
 )
 from repro.core.signals import compute_signals, reference_log_q
 
 __all__ = ["KappaState", "init_state", "kappa_step", "survivor_index",
-           "num_alive", "compact_state", "compute_signals", "reference_log_q"]
+           "num_alive", "compact_state", "init_pool", "init_pool_rows",
+           "pooled_step", "compute_signals", "reference_log_q"]

@@ -26,7 +26,8 @@ class KappaState(NamedTuple):
     alive: jnp.ndarray        # (N,) bool
     prev_kl: jnp.ndarray      # (N,) fp32 — D_{t-1} (D_{c-1} ≡ 0)
     di_buf: jnp.ndarray       # (N, w) fp32 ring buffer of ΔI
-    di_count: jnp.ndarray     # scalar int32 — valid entries in di_buf
+    di_count: jnp.ndarray     # scalar int32 — valid entries in di_buf (≤ w)
+    di_ptr: jnp.ndarray       # scalar int32 — monotone ring write pointer
     ema_raw: jnp.ndarray      # (N,) fp32 uncorrected EMA
     ema_steps: jnp.ndarray    # scalar int32 — EMA updates so far
     traj_num: jnp.ndarray     # (N,) fp32
@@ -53,6 +54,7 @@ def init_state(cfg: KappaConfig, n: Optional[int] = None) -> KappaState:
         prev_kl=jnp.zeros((n,), jnp.float32),
         di_buf=jnp.zeros((n, w), jnp.float32),
         di_count=jnp.int32(0),
+        di_ptr=jnp.int32(0),
         ema_raw=jnp.zeros((n,), jnp.float32),
         ema_steps=jnp.int32(0),
         traj_num=jnp.zeros((n,), jnp.float32),
@@ -86,8 +88,13 @@ def _score_update(state: KappaState, sigs, cfg: KappaConfig
     d_prev = jnp.where(first, jnp.zeros_like(kl), state.prev_kl)  # D_{c-1} ≡ 0
     di = kl - d_prev
 
-    slot = jnp.mod(state.di_count, cfg.window)
+    # ring write: the slot comes from the MONOTONE pointer, not from
+    # di_count — di_count clamps at w (it is the valid-entry count fed to
+    # median_of_means), so indexing by it would pin every post-warmup
+    # write to slot 0 and leave slots 1..w-1 permanently stale
+    slot = jnp.mod(state.di_ptr, cfg.window)
     di_buf = jax.lax.dynamic_update_index_in_dim(state.di_buf, di, slot, axis=1)
+    di_ptr = state.di_ptr + 1
     di_count = jnp.minimum(state.di_count + 1, cfg.window)
     di_hat = robust.median_of_means(di_buf, di_count, cfg.mom_buckets)
 
@@ -104,7 +111,7 @@ def _score_update(state: KappaState, sigs, cfg: KappaConfig
         state.traj_num, state.traj_den, s, state.step)
 
     return state._replace(
-        prev_kl=kl, di_buf=di_buf, di_count=di_count,
+        prev_kl=kl, di_buf=di_buf, di_count=di_count, di_ptr=di_ptr,
         ema_raw=ema_raw, ema_steps=ema_steps,
         traj_num=num, traj_den=den, traj=traj), traj
 
@@ -183,6 +190,69 @@ def num_alive(state: KappaState) -> jnp.ndarray:
     return jnp.sum(state.alive.astype(jnp.int32))
 
 
+# ------------------------------------------------------- pooled controller
+#
+# A multi-request scheduler runs MANY kappa controllers at once. Stepping
+# them one jit dispatch (plus one host sync) per request per tick makes
+# the controller the serving bottleneck, so the pooled form stacks every
+# request's KappaState along a leading slot axis — per-request scalars
+# (step, cutoff, in_gating, di_count, di_ptr, ema_steps, traj_den,
+# horizon_dyn) become (S,) vectors — and one vmapped kappa_step advances
+# all of them in a single dispatch (see serving.strategies
+# PooledKappaController and DESIGN.md §4).
+#
+# Row masking instead of physical compaction: a slot always keeps
+# cfg.num_branches rows. Requests admitted with fewer rows, and rows
+# dropped by bucketed compaction, are represented by alive=False (their
+# diverged pairs forced True at init). That is EXACTLY equivalent to the
+# gathered row-subset state kappa_step otherwise runs on: dead rows
+# contribute 0.0 terms to the masked z-score sums (adding 0.0 is exact
+# in fp), rank below every alive row in _prune (traj masked to -3.4e38,
+# stable argsort preserves alive rows' relative order), and compaction
+# only ever drops dead rows after gating entry, when the divergence
+# matrix no longer influences anything (in_gating is sticky). Hence the
+# pooled controller is bitwise identical per request to the sequential
+# one — the property the scheduler's token-for-token guarantee rests on.
+
+
+def _fresh_masked_state(cfg: KappaConfig, n) -> KappaState:
+    """Fresh full-fan-out state whose rows ≥ ``n`` (traced int32) are
+    padding: dead from the start, pairwise-diverged so adaptive-cutoff
+    checks read exactly as they would on an n-row state."""
+    nb = cfg.num_branches
+    valid = jnp.arange(nb) < n
+    pad = ~valid
+    base = init_state(cfg)
+    return base._replace(
+        alive=valid,
+        diverged=base.diverged | pad[:, None] | pad[None, :])
+
+
+def init_pool(cfg: KappaConfig, slots: int) -> KappaState:
+    """Stacked controller state for ``slots`` concurrent requests: every
+    leaf of init_state gains a leading (slots,) axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (slots,) + x.shape),
+        init_state(cfg))
+
+
+def init_pool_rows(cfg: KappaConfig, row_n) -> KappaState:
+    """Per-slot fresh states with per-slot row counts. row_n: (S,) int32
+    live-row count of each slot (≤ cfg.num_branches); the remaining rows
+    are masked padding. Jittable — used to reset re-acquired slots inside
+    the fused tick dispatch."""
+    return jax.vmap(lambda n: _fresh_masked_state(cfg, n))(row_n)
+
+
+def pooled_step(state: KappaState, logits, tokens, log_q,
+                cfg: KappaConfig) -> KappaState:
+    """kappa_step vmapped over the slot axis. state: init_pool-shaped;
+    logits: (S, N, V); tokens: (S, N); log_q: (V,) shared (all requests
+    condition on the same BOS-only reference)."""
+    return jax.vmap(
+        lambda s, l, t: kappa_step(s, l, t, log_q, cfg))(state, logits, tokens)
+
+
 def compact_state(state: KappaState, idx) -> KappaState:
     """Gather branch rows for bucketed compaction. idx: (M,) int32 of
     surviving branch indices (M ≤ N)."""
@@ -192,6 +262,7 @@ def compact_state(state: KappaState, idx) -> KappaState:
         prev_kl=state.prev_kl[idx],
         di_buf=state.di_buf[idx],
         di_count=state.di_count,
+        di_ptr=state.di_ptr,
         ema_raw=state.ema_raw[idx],
         ema_steps=state.ema_steps,
         traj_num=state.traj_num[idx],

@@ -8,11 +8,15 @@ EPS = 1e-9
 
 def masked_zscore(x, alive, clip: float = 3.0):
     """z-score x across *alive* branches only, clamp to ±clip.
-    x: (N,), alive: (N,) bool. Dead entries are returned as 0."""
+    x: (..., N), alive: (..., N) bool — the branch axis is last, leading
+    axes (e.g. the pooled controller's request-slot axis) batch
+    independently. Dead entries are returned as 0 and contribute exact
+    0.0 terms to the sums, so a masked call is bitwise identical to the
+    same call on only the alive rows."""
     aw = alive.astype(jnp.float32)
-    n = jnp.maximum(jnp.sum(aw), 1.0)
-    mu = jnp.sum(x * aw) / n
-    var = jnp.sum(jnp.square(x - mu) * aw) / n
+    n = jnp.maximum(jnp.sum(aw, axis=-1, keepdims=True), 1.0)
+    mu = jnp.sum(x * aw, axis=-1, keepdims=True) / n
+    var = jnp.sum(jnp.square(x - mu) * aw, axis=-1, keepdims=True) / n
     z = (x - mu) / (jnp.sqrt(var) + EPS)
     return jnp.clip(z, -clip, clip) * aw
 

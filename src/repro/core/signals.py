@@ -43,8 +43,12 @@ def entropy(log_p):
 
 
 def compute_signals(logits, log_q, *, use_pallas: bool = False):
-    """logits: (N, V) fp32/bf16; log_q: (V,) fp32.
-    Returns (kl, conf, ent), each (N,) fp32."""
+    """logits: (..., V) fp32/bf16 — typically (N, V) per-request, or the
+    pooled controller's (S, N, V) request-slot stack (all reductions are
+    over the last axis, so leading axes batch independently and a batched
+    call is row-wise identical to per-row calls); log_q: (V,) fp32,
+    broadcast against the leading axes. Returns (kl, conf, ent), each
+    logits.shape[:-1] fp32. The Pallas kernel path is (N, V)-only."""
     if use_pallas:
         from repro.kernels.fused_score.ops import fused_score
         return fused_score(logits, log_q)

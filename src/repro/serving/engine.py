@@ -134,9 +134,11 @@ def generate_stbon(params, cfg: ModelConfig, kcfg: KappaConfig,
 def serve_step(params, cfg: ModelConfig, kcfg: KappaConfig,
                token, pos, cache, state: kappa_lib.KappaState, log_q, rng):
     """One fused serving step — the decode-shape dry-run lowering target:
-    model decode + KAPPA scoring/gating + sampling."""
+    model decode + sampling + KAPPA scoring/gating. The controller
+    consumes the tokens sampled THIS step (its contract), so sampling
+    chains into scoring device-side."""
     logits, cache = decode_step(params, cfg, token, pos, cache)
-    state = kappa_lib.kappa_step(state, logits, token, log_q, kcfg)
     nxt = sampler.sample(rng, logits, temperature=kcfg.temperature,
                          top_k=kcfg.top_k, top_p=kcfg.top_p)
+    state = kappa_lib.kappa_step(state, logits, nxt, log_q, kcfg)
     return nxt, cache, state

@@ -50,7 +50,22 @@ def _picked_lp(logits, tokens):
     return jnp.take_along_axis(lp, tokens[:, None], axis=-1)[:, 0]
 
 
-picked_logprob = jax.jit(_picked_lp)
+_picked_logprob_jit = jax.jit(_picked_lp)
+
+# device-dispatch counters: schedulers promise ONE fused sampling call
+# per tick regardless of active-request count — tests and the
+# throughput-benchmark breakdown assert against these (reset freely)
+DISPATCHES = {"sample_rows": 0, "picked_logprob": 0}
+
+
+def reset_dispatch_counters() -> None:
+    for k in DISPATCHES:
+        DISPATCHES[k] = 0
+
+
+def picked_logprob(logits, tokens):
+    DISPATCHES["picked_logprob"] += 1
+    return _picked_logprob_jit(logits, tokens)
 
 
 def sample_rows(keys, logits, greedy_mask, kcfg, *, want_picked_lp=False):
@@ -71,6 +86,7 @@ def sample_rows(keys, logits, greedy_mask, kcfg, *, want_picked_lp=False):
     sequential serving."""
     # jit keyed on the sampling hyperparameters only — NOT the whole
     # kcfg, which would retrace for every per-request max_new override
+    DISPATCHES["sample_rows"] += 1
     return _sample_rows(keys, logits, greedy_mask,
                         temperature=kcfg.temperature, top_k=kcfg.top_k,
                         top_p=kcfg.top_p, want_lp=want_picked_lp)

@@ -26,11 +26,23 @@ Shared driver behaviour per tick:
   * ONE fused sampler dispatch for every active request's rows
     (per-row RNG keys — :func:`repro.serving.sampler.sample_rows`)
     instead of a per-request ``sample_step`` call;
-  * per-request strategies (repro.serving.strategies) drive controller
-    updates and pruning on their own row groups; freed capacity is
-    backfilled by queued prefills on the next tick;
+  * ONE pooled KAPPA-controller dispatch for every active kappa request
+    (:class:`repro.serving.strategies.PooledKappaController`): the
+    stacked controller state consumes the pool logits and just-sampled
+    tokens device-to-device, and its alive/traj/cutoff outputs ride the
+    tick's single blocking transfer — replacing the per-request
+    ``kappa_step`` dispatch + ``np.asarray(alive)`` sync that made the
+    controller the bottleneck (dispatch/sync counters in ``counters``
+    assert the ≤1-per-tick contract; ``tick_time`` records the per-tick
+    model/sampler/controller/sync/host breakdown);
+  * per-request strategies (repro.serving.strategies) drive pruning and
+    compaction decisions on their own row groups (host-side, from the
+    published controller mirrors); freed capacity is backfilled by
+    queued prefills on the next tick;
   * per-request ``GenResult``s emitted on completion with the same
-    accounting as sequential serving.
+    accounting as sequential serving. ``submit(..., method=...)`` lets
+    one pool serve mixed kappa/bon/stbon/greedy traffic with
+    per-request ``max_new``.
 
 Equivalence guarantee: the batched decode step is row-independent, the
 per-row-keyed sampler is row-independent, and the host-side per-request
@@ -72,6 +84,7 @@ class _Queued:
     kcfg: KappaConfig          # per-request (max_new may be overridden)
     need: int                  # prompt + n_prefix + max_new token slots
     fan_out: int
+    factory: Callable[[], strategies.DecodeStrategy]  # per-request strategy
 
 
 class _SchedulerBase:
@@ -123,6 +136,23 @@ class _SchedulerBase:
         self._next_rid = 0
         self.ticks = 0
         self._occupied_ticks = 0             # Σ occupied rows over ticks
+        # pooled KAPPA controller (lazily built on first kappa admission;
+        # shared by every kappa request whose controller-relevant kcfg
+        # matches — per-request max_new overrides still share it)
+        self._kappa_pool: Optional[strategies.PooledKappaController] = None
+        self._ctrl_key = strategies.controller_key(kcfg)
+        # dispatch / blocking-transfer counters (the batched-controller
+        # contract: ≤1 controller dispatch and ≤1 controller-carrying
+        # blocking transfer per tick, independent of active-request count)
+        self.counters: Dict[str, int] = {
+            "controller_dispatches": 0, "controller_syncs": 0,
+            "sampler_dispatches": 0, "host_syncs": 0,
+        }
+        # per-tick wall-time breakdown (seconds, cumulative over run)
+        self.tick_time: Dict[str, float] = {
+            "model": 0.0, "sampler": 0.0, "controller": 0.0,
+            "sync": 0.0, "host": 0.0,
+        }
 
     # ----------------------------------------------------- storage hooks
 
@@ -151,21 +181,33 @@ class _SchedulerBase:
     # ------------------------------------------------------------ submit
 
     def submit(self, prompt: np.ndarray, rng, *,
-               max_new: Optional[int] = None) -> int:
+               max_new: Optional[int] = None,
+               method: Optional[str] = None,
+               strategy_factory: Optional[Callable[
+                   [], strategies.DecodeStrategy]] = None) -> int:
         """Queue one prompt with its own RNG stream; returns request id.
         ``max_new`` overrides ``kcfg.max_new_tokens`` for this request
         (mixed-length serving — the paged pool sizes its reservation to
-        the request's own need)."""
+        the request's own need). ``method`` / ``strategy_factory``
+        override the scheduler-level strategy for this request, so one
+        pool can serve mixed kappa/bon/greedy/stbon traffic."""
         kcfg = self.kcfg if max_new is None else dataclasses.replace(
             self.kcfg, max_new_tokens=max_new)
         need = len(prompt) + self.n_prefix + kcfg.max_new_tokens
         if need > self.max_seq:
             raise ValueError(
                 f"prompt needs {need} positions > pool max_seq={self.max_seq}")
+        if strategy_factory is None:
+            strategy_factory = (self.strategy_factory if method is None
+                                else lambda: strategies.make_strategy(method))
+        fan_out = strategy_factory().rows(kcfg)
+        if fan_out > self.rows:
+            raise ValueError(
+                f"request fan-out {fan_out} > pool rows={self.rows}")
         rid = self._next_rid
         self._next_rid += 1
-        item = _Queued(rid, np.asarray(prompt), rng, kcfg, need,
-                       self.strategy_factory().rows(kcfg))
+        item = _Queued(rid, np.asarray(prompt), rng, kcfg, need, fan_out,
+                       strategy_factory)
         self._check_servable(item)
         self.queue.append(item)
         return rid
@@ -185,15 +227,17 @@ class _SchedulerBase:
         pf_logits, cache1 = engine._prefill_one(
             self.params, self.cfg, item.prompt, self.max_seq, self.frontend)
         rs = strategies.RequestState(
-            self.strategy_factory(), self.params, self.cfg, item.kcfg,
+            item.factory(), self.params, self.cfg, item.kcfg,
             len(item.prompt), item.rng, eos_id=self.eos_id,
             bos_id=self.bos_id, max_seq=self.max_seq,
             n_prefix=self.n_prefix, frontend=self.frontend)
+        self._maybe_pool_controller(rs, item)
         sub = cache_lib.broadcast_batch(cache1, n) if n > 1 else cache1
         self._install(slots, item, sub)
         rs.first_tokens(pf_logits)
         if rs.finished:  # e.g. greedy whose first token is already EOS
             self.results[item.rid] = rs.result()
+            rs.strategy.release_pool()
             self._release(slots)
         else:
             self.active[item.rid] = (rs, slots)
@@ -209,19 +253,69 @@ class _SchedulerBase:
         self.free.extend(slots)
         self.free.sort()
 
+    def _maybe_pool_controller(self, rs: strategies.RequestState,
+                               item: _Queued) -> None:
+        """Attach a pooled-controller slot to a kappa request. Pooling
+        needs the fused tick (signals come from the pool logits) and a
+        controller-compatible kcfg; anything else keeps the per-request
+        local controller, which stays correct — just slower."""
+        if not (self.fused_sampling
+                and isinstance(rs.strategy, strategies.KappaStrategy)
+                and strategies.controller_key(item.kcfg) == self._ctrl_key):
+            return
+        if self._kappa_pool is None:
+            # slots = rows: every concurrent kappa request holds >= 1 pool
+            # row, so this bounds the slot count with ONE compiled tick
+            # shape. Inactive slots ride the dispatch (gather row 0, result
+            # discarded) — wasted compute is bounded by rows x fan_out x V
+            # and avoids a bucketed-shape retrace chain; revisit if pools
+            # grow to where idle-slot compute shows in the tick breakdown.
+            self._kappa_pool = strategies.PooledKappaController(
+                self.params, self.cfg, self.kcfg, slots=self.rows,
+                bos_id=self.bos_id, frontend=self.frontend)
+        slot = self._kappa_pool.acquire(rs.n)
+        rs.strategy.attach_pool(self._kappa_pool, slot, rs.n)
+
     # -------------------------------------------------------------- tick
+
+    def _pooled_kappa_dispatch(self, logits, toks_dev):
+        """Build the slot→pool-row gather map for every pooled kappa
+        request and advance ALL their controllers in one device dispatch.
+        Returns the device (alive, traj, cutoff) tuple, or None when no
+        pooled kappa request is active."""
+        pool = self._kappa_pool
+        if pool is None:
+            return None
+        pooled = [(rs, slots) for rs, slots in self.active.values()
+                  if getattr(rs.strategy, "pool", None) is pool]
+        if not pooled:
+            return None
+        gather_idx = np.zeros((pool.slots, pool.nmax), np.int32)
+        done_prev = np.ones((pool.slots, pool.nmax), bool)
+        for rs, slots in pooled:
+            st = rs.strategy
+            gather_idx[st.slot, st.ctrl_rows] = slots
+            done_prev[st.slot, st.ctrl_rows] = rs.done[rs.branch_ids]
+        self.counters["controller_dispatches"] += 1
+        return pool.dispatch(logits, toks_dev, gather_idx, done_prev,
+                             self.eos_id)
 
     def tick(self) -> None:
         """Admit what fits, run one fused decode step over the pool, one
-        fused sampler dispatch over all active rows, then advance every
-        active request on its own rows."""
+        fused sampler dispatch over all active rows, one fused pooled
+        kappa-controller dispatch, ONE blocking device transfer carrying
+        tokens + controller outputs, then advance every active request
+        on its own rows (pure host work)."""
         while self._admit_one():
             pass
         if not self.active:
             return
         self._occupied_ticks += self.rows - len(self.free)
 
+        t0 = time.perf_counter()
         logits = self._decode_tick()
+        t1 = time.perf_counter()
+        self.tick_time["model"] += t1 - t0
 
         toks = picked = None
         if self.fused_sampling:
@@ -236,19 +330,37 @@ class _SchedulerBase:
                 gmask[slots] = rs.strategy.greedy
                 want_lp |= rs.strategy.wants_picked_lp
             key_np = jax.device_get(key_devs)    # one blocking transfer
+            self.counters["host_syncs"] += 1
             for rid, (rs, slots) in self.active.items():
                 keys[slots] = key_np[rid]
-            if want_lp:
-                # picked-token log-probs fused into the sampling dispatch
-                # so BoN-style strategies do zero device work per request
-                toks, picked = jax.device_get(sampler.sample_rows(
-                    jnp.asarray(keys), logits, jnp.asarray(gmask),
-                    self.kcfg, want_picked_lp=True))
-            else:
-                toks = np.asarray(sampler.sample_rows(
-                    jnp.asarray(keys), logits, jnp.asarray(gmask),
-                    self.kcfg))
+            # picked-token log-probs fused into the sampling dispatch
+            # so BoN-style strategies do zero device work per request
+            out_dev = sampler.sample_rows(
+                jnp.asarray(keys), logits, jnp.asarray(gmask), self.kcfg,
+                want_picked_lp=want_lp)
+            self.counters["sampler_dispatches"] += 1
+            toks_dev = out_dev[0] if want_lp else out_dev
+            t2 = time.perf_counter()
+            self.tick_time["sampler"] += t2 - t1
 
+            # the pooled controller consumes the pool logits and the
+            # just-sampled tokens device-to-device — no host round-trip
+            ctrl_dev = self._pooled_kappa_dispatch(logits, toks_dev)
+            t3 = time.perf_counter()
+            self.tick_time["controller"] += t3 - t2
+
+            # ONE blocking transfer for sampled tokens, picked log-probs
+            # AND all pooled controller outputs (alive/traj/cutoff of
+            # every kappa request), independent of active-request count
+            out, ctrl_host = jax.device_get((out_dev, ctrl_dev))
+            self.counters["host_syncs"] += 1
+            if ctrl_host is not None:
+                self.counters["controller_syncs"] += 1
+                self._kappa_pool.publish(ctrl_host)
+            toks, picked = out if want_lp else (out, None)
+            self.tick_time["sync"] += time.perf_counter() - t3
+
+        t4 = time.perf_counter()
         for rid in list(self.active):
             rs, slots = self.active[rid]
             if toks is None:
@@ -257,7 +369,8 @@ class _SchedulerBase:
                 lp = picked[slots] if (picked is not None
                                        and rs.strategy.wants_picked_lp) else None
                 # skip the per-request device gather when the strategy
-                # won't read the logits (greedy; BoN once lp is fused)
+                # won't read the logits (greedy; BoN once lp is fused;
+                # pooled kappa — its signals come from the pool logits)
                 if rs.strategy.needs_step_logits and lp is None:
                     req_logits = logits[self._slots_dev[rid]]
                 else:
@@ -275,7 +388,9 @@ class _SchedulerBase:
                 self.results[rid] = rs.result()
                 del self.active[rid]
                 self._slots_dev.pop(rid, None)
+                rs.strategy.release_pool()
                 self._release(slots)
+        self.tick_time["host"] += time.perf_counter() - t4
         self.ticks += 1
 
     # --------------------------------------------------------------- run
@@ -308,7 +423,7 @@ class _SchedulerBase:
         total_logical = sum(r.logical_tokens for r in self.results.values())
         total_compute = sum(r.compute_tokens for r in self.results.values())
         elapsed = max(getattr(self, "elapsed", 0.0), 1e-9)
-        return {
+        out = {
             "requests": len(self.results),
             "ticks": self.ticks,
             "time_s": elapsed,
@@ -319,6 +434,14 @@ class _SchedulerBase:
             "row_utilization": (self._occupied_ticks
                                 / max(self.ticks * self.rows, 1)),
         }
+        # per-tick breakdown: model step vs sampler dispatch vs pooled
+        # controller dispatch vs the blocking transfer vs per-request
+        # host work (which absorbs UNPOOLED controller dispatch + sync —
+        # the regression the breakdown exists to make visible)
+        for k, v in self.tick_time.items():
+            out[f"time_{k}_s"] = v
+        out.update(self.counters)
+        return out
 
 
 class ContinuousBatchingScheduler(_SchedulerBase):

@@ -19,6 +19,7 @@ per-request RNG keys and ``max_seq``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -83,6 +84,119 @@ def _bos_log_q(params, cfg: ModelConfig, bos_token, frontend=None):
 _kappa_controller = jax.jit(kappa_lib.kappa_step, static_argnums=(4,))
 
 
+def controller_key(kcfg: KappaConfig) -> KappaConfig:
+    """The subset of a KappaConfig the controller math depends on.
+    ``max_new_tokens`` is a host-side stopping knob only, so requests
+    that differ in nothing else can share one pooled controller (and one
+    jit specialization)."""
+    return dataclasses.replace(kcfg, max_new_tokens=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _pooled_kappa_tick(kcfg: KappaConfig, state, logits, toks, gather_idx,
+                       done_prev, reset, slot_active, row_n, log_q, eos_id):
+    """ONE device program advancing every pooled kappa controller:
+
+      * re-initialize slots acquired since the last tick (``reset``) with
+        their own live-row count (padding rows masked dead);
+      * gather each slot's branch logits/tokens from the scheduler's row
+        pool (``gather_idx`` maps controller rows to pool rows — dropped
+        rows point at row 0 and are dead in the state, so their garbage
+        never propagates);
+      * force already-done rows' tokens to EOS exactly as
+        ``RequestState.advance`` does on host;
+      * one vmapped kappa_step over all slots; inactive slots keep their
+        (reset) state untouched.
+
+    Returns the new state plus the (alive, traj, cutoff) views the host
+    needs — transferred by the caller in the same blocking device_get as
+    the sampled tokens, so the controller costs one dispatch and zero
+    extra syncs per tick."""
+    def sel(mask, a, b):
+        return jnp.where(mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b)
+
+    fresh = kappa_lib.init_pool_rows(kcfg, row_n)
+    state = jax.tree.map(lambda f, s: sel(reset, f, s), fresh, state)
+    step_logits = logits[gather_idx]                      # (S, N, V)
+    step_toks = jnp.where(done_prev, eos_id, toks[gather_idx])
+    new = kappa_lib.pooled_step(state, step_logits, step_toks, log_q, kcfg)
+    new = jax.tree.map(lambda a, b: sel(slot_active, a, b), new, state)
+    return new, (new.alive, new.traj, new.cutoff)
+
+
+class PooledKappaController:
+    """Device-resident stacked KappaState shared by every kappa request
+    in a scheduler pool (DESIGN.md §4).
+
+    The scheduler acquires a slot per admitted kappa request, builds one
+    (slots, fan_out) gather map per tick, and calls :meth:`dispatch`
+    once — regardless of how many requests are active. ``publish``
+    stores the host copies (fetched by the scheduler inside its existing
+    per-tick device_get) that :class:`KappaStrategy` then reads its
+    slice of, replacing the per-request ``np.asarray(state.alive)``
+    sync that previously dominated scheduler ticks."""
+
+    def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
+                 slots: int, bos_id: int, frontend=None):
+        self.kcfg = kcfg
+        self.slots = slots
+        self.nmax = kcfg.num_branches
+        self.log_q = _bos_log_q(params, cfg, jnp.int32(bos_id),
+                                frontend[:1] if frontend is not None else None)
+        self.state = kappa_lib.init_pool(kcfg, slots)
+        self.free = list(range(slots))
+        self.row_n = np.full((slots,), self.nmax, np.int32)
+        self.pending_reset = np.zeros((slots,), bool)
+        self.slot_active = np.zeros((slots,), bool)
+        # mirror defaults come from init_state itself so the values served
+        # before a slot's first dispatch can never drift from the device
+        init_cut = int(kappa_lib.init_state(kcfg).cutoff)
+        self._init_cut = init_cut
+        # host mirrors of the per-tick controller outputs
+        self.alive = np.zeros((slots, self.nmax), bool)
+        self.traj = np.zeros((slots, self.nmax), np.float32)
+        self.cutoff = np.full((slots,), init_cut, np.int32)
+        self.dispatches = 0
+
+    def acquire(self, n_rows: int) -> int:
+        slot = self.free.pop(0)
+        self.pending_reset[slot] = True
+        self.slot_active[slot] = True
+        self.row_n[slot] = n_rows
+        self.alive[slot] = np.arange(self.nmax) < n_rows
+        self.traj[slot] = 0.0
+        self.cutoff[slot] = self._init_cut
+        return slot
+
+    def release(self, slot: int) -> None:
+        self.slot_active[slot] = False
+        self.free.append(slot)
+        self.free.sort()
+
+    def dispatch(self, pool_logits, pool_toks, gather_idx: np.ndarray,
+                 done_prev: np.ndarray, eos_id: int):
+        """One jitted controller step for all active slots; returns the
+        DEVICE (alive, traj, cutoff) tuple so the caller can fold it into
+        its single blocking transfer for the tick."""
+        self.state, out = _pooled_kappa_tick(
+            self.kcfg, self.state, pool_logits, pool_toks,
+            jnp.asarray(gather_idx), jnp.asarray(done_prev),
+            jnp.asarray(self.pending_reset), jnp.asarray(self.slot_active),
+            jnp.asarray(self.row_n), self.log_q, jnp.int32(eos_id))
+        self.pending_reset[:] = False
+        self.dispatches += 1
+        return out
+
+    def publish(self, out_host) -> None:
+        """Store the host copies of this tick's controller outputs.
+        Copied: device_get hands back read-only buffers, and acquire()
+        re-initializes a slot's mirror rows in place."""
+        alive, traj, cutoff = out_host
+        self.alive = np.array(alive)
+        self.traj = np.array(traj)
+        self.cutoff = np.array(cutoff)
+
+
 # device-side picked-token log-prob: only the (N,) vector crosses to
 # host, not the full (N, V) softmax (the BoN per-step round-trip fix).
 # One definition shared with the fused sampler dispatch so the BoN
@@ -127,6 +241,9 @@ class DecodeStrategy:
 
     def choose(self, branch_ids: np.ndarray, done: np.ndarray) -> int:
         return int(branch_ids[0])
+
+    def release_pool(self) -> None:
+        """Return any shared pooled-controller slot (no-op by default)."""
 
     def extra(self) -> Dict:
         return {}
@@ -226,7 +343,6 @@ class STBoNStrategy(DecodeStrategy):
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
              done_prev, step_idx, picked_lp=None):
         kcfg = self.kcfg
-        n = kcfg.num_branches
         keep = None
         if not self.truncated:
             self.diverged |= out_tokens[:, None] != out_tokens[None, :]
@@ -240,16 +356,33 @@ class STBoNStrategy(DecodeStrategy):
                 self.prob_acc += probs
                 self.prob_cnt += 1
                 if step_idx >= self.cutoff_hit + self.buffer_window:
-                    mean_p = self.prob_acc / max(self.prob_cnt, 1)
-                    norm = np.linalg.norm(mean_p, axis=-1, keepdims=True)
-                    unit = mean_p / np.maximum(norm, 1e-12)
-                    sim = unit @ unit.T
-                    consistency = (sim.sum(-1) - 1.0) / max(n - 1, 1)
-                    keep = np.array([int(np.argmax(consistency))])
+                    keep = np.array([int(np.argmax(self._consistency()))])
                     self.truncated = True
         bids = branch_ids if keep is None else branch_ids[keep]
         stop = (self.truncated and bool(done[bids[0]])) or bool(np.all(done[bids]))
-        return StepDecision(counted=~done[branch_ids], keep=keep, stop=stop)
+        # EOS-emitting steps count (~done_prev), matching greedy/BoN —
+        # a branch's own EOS token is part of its generated sequence
+        return StepDecision(counted=~done_prev, keep=keep, stop=stop)
+
+    def _consistency(self):
+        mean_p = self.prob_acc / max(self.prob_cnt, 1)
+        norm = np.linalg.norm(mean_p, axis=-1, keepdims=True)
+        unit = mean_p / np.maximum(norm, 1e-12)
+        sim = unit @ unit.T
+        n = self.prob_acc.shape[0]
+        return (sim.sum(-1) - 1.0) / max(n - 1, 1)
+
+    def choose(self, branch_ids, done):
+        """If every branch hit EOS before ``cutoff + buffer_window``
+        forced a truncation, select by the consistency accumulated so
+        far instead of silently falling back to branch 0. Before any
+        divergence (no cutoff, no signal accumulated) all branches are
+        prefix-identical, so branch 0 is the deliberate tie-break."""
+        if self.truncated:
+            return int(branch_ids[0])
+        if self.prob_cnt > 0:
+            return int(branch_ids[int(np.argmax(self._consistency()))])
+        return int(branch_ids[0])
 
     def extra(self):
         return {"cutoff": self.cutoff_hit}
@@ -257,24 +390,89 @@ class STBoNStrategy(DecodeStrategy):
 
 class KappaStrategy(DecodeStrategy):
     """The paper's KAPPA controller: latent-informativeness scoring with
-    scheduled pruning and bucketed cache compaction (DESIGN.md §2)."""
+    scheduled pruning and bucketed cache compaction (DESIGN.md §2).
+
+    Two controller backends behind the same host-side decisions:
+
+      * **local** (single-request engine loop, or ``fused_sampling=False``
+        schedulers): this strategy owns a jitted per-request
+        ``kappa_step`` — one dispatch and one blocking ``np.asarray``
+        sync per step.
+      * **pooled** (the batched scheduler path): the scheduler attaches a
+        :class:`PooledKappaController` slot; the controller math runs in
+        the scheduler's single fused tick dispatch and this strategy only
+        reads its slice of the published host mirrors — zero device work
+        and zero syncs here. ``ctrl_rows`` maps the request's current
+        (compaction-survivor) row order onto its slot's controller rows;
+        compaction just shrinks the map, the pooled state is never
+        gathered (dropped rows are dead and masked — see core.kappa).
+    """
 
     name = "kappa"
 
     def begin(self, params, cfg, kcfg, *, bos_id, frontend=None):
         super().begin(params, cfg, kcfg, bos_id=bos_id, frontend=frontend)
-        self.log_q = _bos_log_q(params, cfg, jnp.int32(bos_id),
-                                frontend[:1] if frontend is not None else None)
-        self.state = kappa_lib.init_state(kcfg)
+        self._begin_args = (params, cfg, jnp.int32(bos_id),
+                            frontend[:1] if frontend is not None else None)
+        self.state = None            # local backend, created on first use
+        self.log_q = None
         self.chain = cache_lib.bucket_chain(kcfg.num_branches)
+        self.pool: Optional[PooledKappaController] = None
+        self.slot: Optional[int] = None
+        self.ctrl_rows: Optional[np.ndarray] = None
+
+    # ------------------------------------------------- controller backends
+
+    def attach_pool(self, pool: PooledKappaController, slot: int,
+                    n_rows: int) -> None:
+        self.pool, self.slot = pool, slot
+        self.ctrl_rows = np.arange(n_rows)
+        # the pooled tick computes signals from the pool logits directly;
+        # the scheduler can skip this request's per-tick logits gather
+        self.needs_step_logits = False
+
+    def release_pool(self) -> None:
+        if self.pool is not None:
+            self.pool.release(self.slot)
+            self.pool = self.slot = self.ctrl_rows = None
+            self._pool_released = True
+
+    def _local_state(self):
+        if getattr(self, "_pool_released", False):
+            # result() must run BEFORE release_pool(); lazily building a
+            # fresh local state here would silently report branch 0 /
+            # zero trajectories instead of the pooled outcome
+            raise RuntimeError(
+                "KappaStrategy read after its pooled-controller slot was "
+                "released — call result() before release_pool()")
+        if self.state is None:
+            params, cfg, bos, fe = self._begin_args
+            self.log_q = _bos_log_q(params, cfg, bos, fe)
+            self.state = kappa_lib.init_state(self.kcfg)
+        return self.state
+
+    # ---------------------------------------------------------------- step
 
     def step(self, logits, in_tokens, out_tokens, branch_ids, done,
              done_prev, step_idx, picked_lp=None):
         kcfg = self.kcfg
-        self.state = _kappa_controller(self.state, logits,
-                                       jnp.asarray(in_tokens), self.log_q, kcfg)
-        alive = np.asarray(self.state.alive)
-        counted = alive & ~done[branch_ids]
+        if self.pool is not None:
+            # controller already stepped in the scheduler's fused tick
+            # dispatch; read this request's slice of the host mirrors
+            alive = self.pool.alive[self.slot][self.ctrl_rows]
+            traj = self.pool.traj[self.slot][self.ctrl_rows]
+        else:
+            # controller contract: ``tokens`` are the tokens JUST sampled
+            # (out_tokens) — feeding last step's tokens delays the
+            # adaptive cutoff one step past true all-pairwise divergence
+            self.state = _kappa_controller(self._local_state(), logits,
+                                           jnp.asarray(out_tokens),
+                                           self.log_q, kcfg)
+            alive = np.asarray(self.state.alive)
+            traj = np.asarray(self.state.traj)
+        # ~done_prev: a branch's own EOS-emitting step is logged/counted,
+        # the same accounting greedy and BoN use
+        counted = alive & ~done_prev
 
         keep = None
         rows = len(branch_ids)
@@ -282,28 +480,45 @@ class KappaStrategy(DecodeStrategy):
             n_alive = int(np.sum(alive))
             bucket = cache_lib.next_bucket(self.chain, max(n_alive, 1), rows)
             if bucket < rows:
-                traj = np.asarray(self.state.traj)
                 order = np.argsort(~alive * 1_000_000 - traj)  # alive best first
                 keep = np.sort(order[:bucket])
-                self.state = kappa_lib.compact_state(self.state, jnp.asarray(keep))
+                if self.pool is not None:
+                    self.ctrl_rows = self.ctrl_rows[keep]
+                else:
+                    self.state = kappa_lib.compact_state(self.state,
+                                                         jnp.asarray(keep))
+                alive = alive[keep]
 
         # termination on the post-compaction view
-        alive2 = np.asarray(self.state.alive)
         bids = branch_ids if keep is None else branch_ids[keep]
-        live = bids[alive2]
+        live = bids[alive]
         stop = (len(live) == 1 and bool(done[live[0]])) \
-            or bool(np.all(done[bids] | ~alive2))
+            or bool(np.all(done[bids] | ~alive))
         return StepDecision(counted=counted, keep=keep, stop=stop)
 
+    # ------------------------------------------------------------ selection
+
+    def _alive_traj(self):
+        if self.pool is not None:
+            return (self.pool.alive[self.slot][self.ctrl_rows],
+                    self.pool.traj[self.slot][self.ctrl_rows])
+        st = self._local_state()
+        return np.asarray(st.alive), np.asarray(st.traj)
+
     def choose(self, branch_ids, done):
-        traj = np.asarray(self.state.traj)
-        alive = np.asarray(self.state.alive)
+        alive, traj = self._alive_traj()
         masked = np.where(alive, traj, -np.inf)
         return int(branch_ids[int(np.argmax(masked))])
 
     def extra(self):
-        return {"cutoff": int(np.asarray(self.state.cutoff)),
-                "traj": np.asarray(self.state.traj).tolist()}
+        if self.pool is not None:
+            cutoff = int(self.pool.cutoff[self.slot])
+            traj = self.pool.traj[self.slot][self.ctrl_rows]
+        else:
+            st = self._local_state()
+            cutoff = int(np.asarray(st.cutoff))
+            traj = np.asarray(st.traj)
+        return {"cutoff": cutoff, "traj": traj.tolist()}
 
 
 _STRATEGIES = {

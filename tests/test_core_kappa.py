@@ -160,6 +160,45 @@ def test_kappa_no_pruning_during_draft():
             assert int(K.num_alive(state)) == 4
 
 
+def test_di_ring_buffer_wraps_and_mom_tracks_fresh_values():
+    """Regression: the ΔI ring slot must come from a MONOTONE write
+    pointer. Indexing by the clamped ``di_count`` pins every post-warmup
+    write to slot 0, so after the ΔI level shifts the median-of-means
+    keeps reporting the stale pre-shift level forever."""
+    cfg = _mk_cfg(window=8, mom_buckets=4)
+    state = K.init_state(cfg)
+    kl = 0.0
+    for t in range(16):                      # 2× window: forces a wrap
+        kl += 1.0 if t < 8 else 5.0          # ΔI jumps 1.0 → 5.0 at t=8
+        sigs = (jnp.full((4,), kl), jnp.zeros(4), jnp.zeros(4))
+        state, _ = K._score_update(state, sigs, cfg)
+    assert int(state.di_ptr) == 16, "write pointer must be monotone"
+    assert int(state.di_count) == 8, "valid-entry count stays clamped at w"
+    # the window holds only post-shift ΔI values …
+    np.testing.assert_allclose(np.asarray(state.di_buf), 5.0, rtol=1e-6)
+    # … so the MoM estimate tracks the fresh level (pre-fix: ≈1.0,
+    # the stale entries in slots 1..w-1 dominate the bucket medians)
+    est = robust.median_of_means(state.di_buf, state.di_count,
+                                 cfg.mom_buckets)
+    np.testing.assert_allclose(np.asarray(est), 5.0, rtol=1e-6)
+
+
+def test_di_ring_buffer_partial_window_order():
+    """Before the first wrap the ring is chronological: slot t holds the
+    ΔI of scoring step t, and di_count == di_ptr."""
+    cfg = _mk_cfg(window=8, mom_buckets=4)
+    state = K.init_state(cfg)
+    kl = 0.0
+    for t in range(5):
+        kl += float(t + 1)                   # ΔI sequence 1, 2, 3, 4, 5
+        sigs = (jnp.full((4,), kl), jnp.zeros(4), jnp.zeros(4))
+        state, _ = K._score_update(state, sigs, cfg)
+    assert int(state.di_ptr) == int(state.di_count) == 5
+    np.testing.assert_allclose(np.asarray(state.di_buf[0, :5]),
+                               [1.0, 2.0, 3.0, 4.0, 5.0], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.di_buf[:, 5:]), 0.0)
+
+
 def test_adaptive_cutoff_waits_for_divergence():
     cfg = _mk_cfg(adaptive_cutoff=True, max_cutoff=50)
     state = K.init_state(cfg)
@@ -209,6 +248,76 @@ def test_init_state_row_subset_view():
     assert small.alive.shape == (2,)
     np.testing.assert_allclose(np.asarray(small.traj),
                                np.asarray(state.traj[jnp.array([0, 2])]))
+
+
+# ------------------------------------------------------ pooled controller
+
+def test_pooled_step_bitwise_matches_per_request():
+    """One vmapped pooled_step over S stacked controllers must equal S
+    independent kappa_step calls bit for bit — the property the batched
+    scheduler's token-for-token guarantee rests on."""
+    cfg = _mk_cfg()
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    S = 3
+    pool = K.init_pool(cfg, S)
+    per = [K.init_state(cfg) for _ in range(S)]
+    rng = jax.random.PRNGKey(42)
+    for step in range(7):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        logits = jax.random.normal(k1, (S, 4, 64)) * 3
+        tokens = jax.random.randint(k2, (S, 4), 0, 64)
+        pool = K.pooled_step(pool, logits, tokens, log_q, cfg)
+        per = [K.kappa_step(s, logits[i], tokens[i], log_q, cfg)
+               for i, s in enumerate(per)]
+        for i, s in enumerate(per):
+            for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[i], pool)),
+                            jax.tree.leaves(s)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    f"slot {i} diverged at step {step}"
+
+
+def test_pooled_masked_rows_match_subset_state():
+    """A full-fan-out slot whose padding rows are masked dead behaves
+    exactly like the n-row subset state: dead rows contribute exact-zero
+    terms to the masked statistics and rank below every alive row."""
+    cfg = _mk_cfg()                          # num_branches=4
+    n = 3
+    log_q = signals.reference_log_q(jnp.zeros(64))
+    sub = K.init_state(cfg, n=n)
+    pool = K.init_pool_rows(cfg, jnp.array([n], jnp.int32))
+    rng = jax.random.PRNGKey(7)
+    for _ in range(8):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        logits = jax.random.normal(k1, (n, 64)) * 2
+        tokens = jax.random.randint(k2, (n,), 0, 64)
+        # padding row rides along with arbitrary-but-finite inputs
+        pad_logits = jnp.concatenate([logits, jnp.zeros((1, 64))])
+        pad_tokens = jnp.concatenate([tokens, jnp.zeros((1,), jnp.int32)])
+        sub = K.kappa_step(sub, logits, tokens, log_q, cfg)
+        pool = K.pooled_step(pool, pad_logits[None], pad_tokens[None],
+                             log_q, cfg)
+    assert not bool(pool.alive[0, n]), "padding row must stay dead"
+    np.testing.assert_array_equal(np.asarray(pool.alive[0, :n]),
+                                  np.asarray(sub.alive))
+    assert np.array_equal(np.asarray(pool.traj[0, :n]), np.asarray(sub.traj))
+    assert int(pool.cutoff[0]) == int(sub.cutoff)
+    assert bool(pool.in_gating[0]) == bool(sub.in_gating)
+    assert int(pool.step[0]) == int(sub.step)
+
+
+def test_init_pool_rows_padding_masks():
+    cfg = _mk_cfg()
+    pool = K.init_pool_rows(cfg, jnp.array([4, 2, 1], jnp.int32))
+    assert pool.alive.shape == (3, 4)
+    np.testing.assert_array_equal(np.asarray(pool.alive),
+                                  [[True] * 4,
+                                   [True, True, False, False],
+                                   [True, False, False, False]])
+    # padding rows read as diverged against everyone (adaptive-cutoff
+    # checks on the masked state equal those on the subset state)
+    div = np.asarray(pool.diverged)
+    assert div[1, 2:, :].all() and div[1, :, 2:].all()
+    assert not div[1, 0, 1] and not div[1, 1, 0]
 
 
 def test_adaptive_horizon_scales_with_difficulty():

@@ -9,8 +9,11 @@ from repro.configs import get_config
 from repro.configs.base import KappaConfig
 from repro.data import tokenizer as tok
 from repro.models import init_params
+from repro.core import kappa as kappa_lib
+from repro.core import signals
 from repro.serving import cache as cache_lib
 from repro.serving import engine
+from repro.serving import strategies
 
 
 @pytest.fixture(scope="module")
@@ -90,6 +93,128 @@ def test_token_log_tracks_all_branches(setup):
     assert r.all_tokens.shape[0] == kcfg.num_branches
     assert (r.lengths > 0).all()
     assert r.lengths[r.chosen_branch] >= len(r.tokens)
+
+
+# ------------------------------------------- strategy-level regressions
+
+def _bare_kappa(kcfg, vocab=64):
+    """KappaStrategy wired for direct step() calls (no model)."""
+    st = strategies.KappaStrategy()
+    st.kcfg = kcfg
+    st.state = kappa_lib.init_state(kcfg)
+    st.log_q = signals.reference_log_q(jnp.zeros(vocab))
+    st.chain = cache_lib.bucket_chain(kcfg.num_branches)
+    st.pool = st.slot = st.ctrl_rows = None
+    return st
+
+
+def test_kappa_divergence_uses_just_sampled_tokens():
+    """Regression: the adaptive cutoff must fire on the step whose
+    OUT tokens first all-pairwise diverge — feeding last step's tokens
+    (in_tokens) delays it one step."""
+    kcfg = KappaConfig(num_branches=4, adaptive_cutoff=True, max_cutoff=50,
+                       horizon=6, window=8, mom_buckets=4,
+                       max_new_tokens=64, compaction=False)
+    st = _bare_kappa(kcfg)
+    n = 4
+    logits = jax.random.normal(jax.random.PRNGKey(0), (n, 64))
+    bids = np.arange(n)
+    done = np.zeros(n, bool)
+    same = np.zeros(n, np.int32)
+    distinct = np.arange(n, dtype=np.int32)
+    # two steps where the JUST-sampled tokens agree; in_tokens are fed
+    # distinct so the buggy (in_tokens) variant would fire immediately
+    for k in (1, 2):
+        st.step(logits, distinct, same, bids, done, done.copy(), k)
+        assert not bool(st.state.in_gating), \
+            "cutoff fired on stale (previous-step) tokens"
+    # the step that samples all-distinct tokens must enter gating NOW
+    st.step(logits, same, distinct, bids, done, done.copy(), 3)
+    assert bool(st.state.in_gating)
+    assert int(st.state.cutoff) == 2, \
+        "cutoff must pin to the controller step that observed divergence"
+
+
+def test_eos_step_counted_across_strategies():
+    """Accounting parity: a branch's own EOS-emitting step (done_prev
+    False, done True after the update) is counted/logged by EVERY
+    strategy — greedy/BoN always did; kappa and ST-BoN used the
+    post-update done mask and silently dropped the EOS token."""
+    n = 4
+    kcfg = KappaConfig(num_branches=n, adaptive_cutoff=False, draft_cutoff=8,
+                       horizon=6, window=8, mom_buckets=4, max_new_tokens=64,
+                       compaction=False)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (n, 64))
+    bids = np.arange(n)
+    done_prev = np.zeros(n, bool)
+    done = np.zeros(n, bool)
+    done[2] = True                        # branch 2 emitted EOS this step
+    out = np.array([5, 6, tok.EOS, 7], np.int32)
+
+    cfg = get_config("deepseek-r1-distill-qwen-1.5b").reduced(
+        num_layers=2, d_model=64, vocab_size=64)
+
+    kappa = _bare_kappa(kcfg)
+    dec_k = kappa.step(logits, out, out, bids, done, done_prev, 1)
+
+    stbon = strategies.STBoNStrategy(buffer_window=8)
+    stbon.begin(None, cfg, kcfg, bos_id=tok.BOS)
+    dec_s = stbon.step(logits, out, out, bids, done, done_prev, 1)
+
+    bon = strategies.BoNStrategy()
+    bon.begin(None, cfg, kcfg, bos_id=tok.BOS)
+    dec_b = bon.step(logits, out, out, bids, done, done_prev, 1,
+                     picked_lp=np.zeros(n))
+
+    greedy = strategies.GreedyStrategy()
+    dec_g = greedy.step(logits[:1], out[:1], out[:1], np.arange(1),
+                        np.array([True]), np.array([False]), 1)
+
+    for name, dec in [("kappa", dec_k), ("stbon", dec_s), ("bon", dec_b)]:
+        assert dec.counted[2], f"{name} dropped the EOS-emitting step"
+    assert dec_g.counted[0], "greedy dropped the EOS-emitting step"
+    # and a branch already done BEFORE the step is never counted
+    done_prev2 = done.copy()
+    done2 = done.copy()
+    dec_k2 = kappa.step(logits, out, out, bids, done2, done_prev2, 2)
+    assert not dec_k2.counted[2]
+
+
+def test_stbon_chooses_most_consistent_on_early_eos():
+    """If every branch hits EOS before cutoff + buffer_window forces a
+    truncation, ST-BoN must still select by the consistency signal it
+    accumulated — not silently fall back to branch 0."""
+    n = 3
+    kcfg = KappaConfig(num_branches=n, max_cutoff=8, horizon=6, window=8,
+                       mom_buckets=4, max_new_tokens=64)
+    cfg = get_config("deepseek-r1-distill-qwen-1.5b").reduced(
+        num_layers=2, d_model=64, vocab_size=16)
+    st = strategies.STBoNStrategy(buffer_window=10)
+    st.begin(None, cfg, kcfg, bos_id=tok.BOS)
+    # branch 0 is the odd one out; branches 1 and 2 share a distribution
+    logits = jnp.asarray(np.stack([
+        np.eye(16)[0] * 9.0,
+        np.eye(16)[3] * 9.0,
+        np.eye(16)[3] * 9.0,
+    ]).astype(np.float32))
+    bids = np.arange(n)
+    zeros = np.zeros(n, bool)
+    # step 1: all-distinct tokens → cutoff hits, consistency accumulates
+    st.step(logits, np.zeros(n, np.int32), np.array([0, 3, 4], np.int32),
+            bids, zeros.copy(), zeros.copy(), 1)
+    assert st.cutoff_hit == 1 and not st.truncated
+    # step 2: every branch emits EOS — stop fires before truncation
+    done = np.ones(n, bool)
+    dec = st.step(logits, np.array([0, 3, 4], np.int32),
+                  np.full(n, tok.EOS, np.int32), bids, done, zeros.copy(), 2)
+    assert dec.stop and not st.truncated
+    choice = st.choose(bids, done)
+    assert choice in (1, 2), \
+        f"must pick a consistent branch, not the default 0 (got {choice})"
+    # the deliberate fallback: no divergence ever observed → branch 0
+    st2 = strategies.STBoNStrategy(buffer_window=10)
+    st2.begin(None, cfg, kcfg, bos_id=tok.BOS)
+    assert st2.choose(bids, done) == 0
 
 
 # ------------------------------------------------------- cache helpers

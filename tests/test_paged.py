@@ -221,6 +221,46 @@ def test_paged_scheduler_mixed_max_new(setup):
         assert s.logical_tokens == res[rid].logical_tokens
 
 
+def test_paged_mixed_pool_batched_controller_contract(setup):
+    """Acceptance property: a paged pool serving SEVERAL kappa requests
+    (mixed with bon and greedy traffic, per-request max_new) makes at
+    most one controller device dispatch and one controller-carrying
+    blocking transfer per tick — counted, not assumed — and stays
+    token-for-token equivalent to sequential serving."""
+    import dataclasses
+    cfg, params, kcfg, prompts, max_seq = setup
+    specs = [("kappa", 20), ("kappa", 8), ("bon", 12),
+             ("greedy", 16), ("kappa", 12)]
+    ps = [prompts[i % len(prompts)] for i in range(len(specs))]
+    seq = []
+    for i, (p, (m, mn)) in enumerate(zip(ps, specs)):
+        kc = dataclasses.replace(kcfg, max_new_tokens=mn)
+        fn = getattr(engine, f"generate_{m}")
+        seq.append(fn(params, cfg, kc, p, jax.random.PRNGKey(i),
+                      eos_id=tok.EOS, bos_id=tok.BOS, max_seq=max_seq))
+    sched = PagedScheduler(params, cfg, kcfg, rows=12, max_seq=max_seq,
+                           page_size=8, num_pages=64, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(p, jax.random.PRNGKey(i), max_new=mn, method=m)
+            for i, (p, (m, mn)) in enumerate(zip(ps, specs))]
+    res = sched.run()
+    for s, rid, (m, mn) in zip(seq, rids, specs):
+        assert s.tokens == res[rid].tokens, f"{m} diverged in the paged pool"
+        assert s.logical_tokens == res[rid].logical_tokens
+        assert s.steps == res[rid].steps
+    # the controller contract, independent of the active kappa count
+    assert sched._kappa_pool is not None
+    assert sched._kappa_pool.dispatches >= 1
+    assert sched.counters["controller_dispatches"] <= sched.ticks
+    assert sched.counters["controller_syncs"] == \
+        sched.counters["controller_dispatches"]
+    # ≤ 2 blocking transfers per tick total (RNG keys + tokens/controller)
+    assert sched.counters["host_syncs"] <= 2 * sched.ticks
+    # pool fully drained
+    assert sorted(sched.free) == list(range(12))
+    assert sorted(sched._kappa_pool.free) == list(range(12))
+
+
 def test_paged_out_of_pages_refusal(setup):
     """A request whose worst case exceeds the whole pool is refused at
     submit; one that merely has to wait is served once pages free up."""

@@ -110,6 +110,58 @@ def test_stbon_scheduler_matches_sequential(setup):
         assert s.logical_tokens == c.logical_tokens
 
 
+def test_kappa_scheduler_batched_controller_contract(setup):
+    """The batched-controller guarantee: the pooled KAPPA controller
+    makes at most ONE device dispatch and rides at most ONE blocking
+    transfer per tick, no matter how many kappa requests are active."""
+    from repro.serving import sampler
+    cfg, params, kcfg, prompts, max_seq = setup
+    sampler.reset_dispatch_counters()
+    sched, conc = _scheduled(setup, "kappa", rows=8)
+    assert sched._kappa_pool is not None
+    assert sched._kappa_pool.dispatches == \
+        sched.counters["controller_dispatches"]
+    assert 0 < sched.counters["controller_dispatches"] <= sched.ticks
+    assert sched.counters["controller_syncs"] == \
+        sched.counters["controller_dispatches"]
+    # the sampler stays fused too: one pool-wide sample_rows per tick
+    # plus one per admission (prefill fan-out sampling)
+    assert sampler.DISPATCHES["sample_rows"] <= sched.ticks + len(prompts)
+    # all controller slots returned
+    assert sorted(sched._kappa_pool.free) == list(range(8))
+
+
+def test_mixed_strategy_pool_matches_sequential(setup):
+    """One pool serving kappa + bon + greedy requests with per-request
+    max_new stays token-for-token equivalent to dedicated sequential
+    runs of each method."""
+    import dataclasses
+    cfg, params, kcfg, prompts, max_seq = setup
+    specs = [("kappa", 20), ("bon", 12), ("greedy", 16)]
+    seq = []
+    for i, (p, (m, mn)) in enumerate(zip(prompts, specs)):
+        kc = dataclasses.replace(kcfg, max_new_tokens=mn)
+        fn = getattr(engine, f"generate_{m}")
+        seq.append(fn(params, cfg, kc, p, jax.random.PRNGKey(i),
+                      eos_id=tok.EOS, bos_id=tok.BOS, max_seq=max_seq))
+    sched = ContinuousBatchingScheduler(
+        params, cfg, kcfg, rows=8, max_seq=max_seq, method="kappa",
+        eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(p, jax.random.PRNGKey(i), max_new=mn, method=m)
+            for i, (p, (m, mn)) in enumerate(zip(prompts, specs))]
+    res = sched.run()
+    for s, rid, (m, mn) in zip(seq, rids, specs):
+        c = res[rid]
+        assert s.tokens == c.tokens, f"{m} diverged in the mixed pool"
+        assert s.chosen_branch == c.chosen_branch
+        assert s.logical_tokens == c.logical_tokens
+        assert s.compute_tokens == c.compute_tokens
+        assert s.steps == c.steps
+    # kappa ran pooled even in mixed company
+    assert sched._kappa_pool is not None
+    assert sched.counters["controller_dispatches"] <= sched.ticks
+
+
 def test_scheduler_pool_lifecycle(setup):
     cfg, params, kcfg, prompts, max_seq = setup
     sched, conc = _scheduled(setup, "kappa", rows=6)
