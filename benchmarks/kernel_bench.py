@@ -88,6 +88,24 @@ def _wrapper_smoke():
                     lambda *a: (paged_decode_attn(*a),), q, kp, vp, bt, pos,
                     iters=3)})
 
+    # the serving-layer wiring: attn_decode_paged with the paged kernel
+    # forced on (the path TPU decode takes), K/V write included
+    from repro.models import attention as attn_mod
+    d = H * hd
+    ap = attn_mod.init_attn(ks[5], d, H, KV, hd, False, jnp.float32)
+    cache = attn_mod.init_paged_kv(P, ps, KV, hd, jnp.float32)
+    x = jax.random.normal(ks[6], (B, 1, d))
+    attn_mod.set_paged_kernel(True)
+    try:
+        out.append({"name": "wrapper_attn_decode_paged_wired",
+                    "us_fused": _time(
+                        lambda *a: attn_mod.attn_decode_paged(
+                            *a, num_heads=H, num_kv_heads=KV, head_dim=hd,
+                            rope_theta=1e4, use_rope=True),
+                        ap, x, pos, cache, bt, iters=3)})
+    finally:
+        attn_mod.set_paged_kernel(None)
+
     T, Hh, hd2 = 32, 2, 32
     r = jax.random.normal(ks[5], (1, T, Hh, hd2))
     kk = jax.random.normal(ks[6], (1, T, Hh, hd2))

@@ -29,6 +29,13 @@ Every mode decodes the same prompts with the same per-request RNG keys,
 so outputs are token-for-token identical (asserted) — the comparison is
 pure wall-clock.
 
+Part 3 (high fan-out COW): N=8 branches over multi-page prompts inside
+a page budget the pre-PR broadcast allocator could not admit one
+request into — prefix sharing (prompt pages aliased across branches),
+lazy decode-page allocation and youngest-admitted preemption serve the
+whole queue; shared-page savings, peak pages and preemption counts are
+emitted, and zero leaked pages is asserted after every paged run.
+
 Each scheduler run also reports a per-tick wall-time breakdown (model
 step / sampler dispatch / pooled-controller dispatch / blocking sync /
 per-request host work) so controller-overhead regressions are visible:
@@ -80,6 +87,9 @@ def _mixed_max_new(depth: int):
     return [MIXED_MAX_NEW[i % len(MIXED_MAX_NEW)] for i in range(depth)]
 
 
+FANOUT_N = 8                    # high-fan-out COW scenario branches
+FANOUT_DEPTH = 6
+
 BREAKDOWN_KEYS = ("model", "sampler", "controller", "sync", "host")
 
 
@@ -115,7 +125,67 @@ def _run_scheduled(cfg, params, kcfg, method, prompts, max_seq, rows, *,
             for i, (p, mn) in enumerate(zip(prompts, max_news))]
     res = sched.run()
     tp = sched.throughput()
+    if paged:
+        # COW/refcount hygiene: every page reference dropped, none leaked
+        assert sched.alloc.free_count == sched.num_pages, \
+            f"leaked {sched.num_pages - sched.alloc.free_count} pages"
     return [res[r] for r in rids], tp
+
+
+def _long_prompts(depth: int):
+    """Multi-page prompts (3 problems concatenated) so prefix sharing has
+    full prompt pages to alias."""
+    base = _prompts(3 * depth)
+    return [np.concatenate([base[3 * i]]
+                           + [b[1:] for b in base[3 * i + 1: 3 * i + 3]])
+            for i in range(depth)]
+
+
+def _fanout_scenario(cfg, params):
+    """High-fan-out COW scenario: N=8 branches over long prompts inside a
+    page budget the pre-PR broadcast allocator could not even admit ONE
+    request into (it reserved N x ceil((prompt+max_new)/page_size) pages
+    up front). Prefix sharing + lazy allocation serve the whole queue in
+    that budget; preemptions (youngest-admitted eviction on page
+    exhaustion) are part of the deal and are reported."""
+    kcfg = _kcfg(FANOUT_N)
+    prompts = _long_prompts(FANOUT_DEPTH)
+    max_seq = max(len(p) for p in prompts) + kcfg.max_new_tokens
+    max_seq = -(-max_seq // PAGE_SIZE) * PAGE_SIZE
+    need_pages = [-(-(len(p) + kcfg.max_new_tokens) // PAGE_SIZE)
+                  for p in prompts]
+    full_pages = [len(p) // PAGE_SIZE for p in prompts]
+    broadcast_worst = max(FANOUT_N * n for n in need_pages)
+    shared_worst = max(f + FANOUT_N * (n - f)
+                       for f, n in zip(full_pages, need_pages))
+    num_pages = shared_worst + 4
+    assert broadcast_worst > num_pages, \
+        "budget no longer breaks the broadcast allocator - shrink it"
+    sched = PagedScheduler(params, cfg, kcfg, rows=2 * FANOUT_N,
+                           max_seq=max_seq, page_size=PAGE_SIZE,
+                           num_pages=num_pages, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(p, jax.random.PRNGKey(i))
+            for i, p in enumerate(prompts)]
+    res = sched.run()
+    assert set(res) == set(rids)
+    tp = sched.throughput()
+    assert sched.alloc.free_count == num_pages, \
+        f"leaked {num_pages - sched.alloc.free_count} pages"
+    assert tp["page_peak"] <= num_pages
+    return [{
+        "kind": "fanout", "method": "kappa", "fan_out": FANOUT_N,
+        "depth": FANOUT_DEPTH, "page_size": PAGE_SIZE,
+        "num_pages": num_pages,
+        "broadcast_worst_pages_per_req": broadcast_worst,
+        "shared_worst_pages_per_req": shared_worst,
+        "page_peak": tp["page_peak"],
+        "shared_page_savings": 1.0 - shared_worst / broadcast_worst,
+        "preemptions": tp["preemptions"],
+        "tokens_per_s": tp["tokens_per_s"],
+        "page_utilization": tp["page_utilization"],
+        "ticks": tp["ticks"], "time_s": tp["time_s"],
+    }]
 
 
 def run(cfg, params):
@@ -279,6 +349,7 @@ def run(cfg, params):
                 "paged_controller_dispatches": tp_p["controller_dispatches"],
                 "paged_controller_syncs": tp_p["controller_syncs"],
             })
+    out.extend(_fanout_scenario(cfg, params))
     return out
 
 
@@ -292,6 +363,15 @@ def emit_csv(rows):
                        f"cb_tok_s={r['cb_tokens_per_s']:.1f};"
                        f"speedup={r['speedup']:.2f};"
                        f"util={r['row_utilization']:.2f}")
+        elif r["kind"] == "fanout":
+            name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
+            us = r["time_s"] * 1e6 / max(r["ticks"], 1)
+            derived = (f"tok_s={r['tokens_per_s']:.1f};"
+                       f"num_pages={r['num_pages']};"
+                       f"bcast_worst={r['broadcast_worst_pages_per_req']};"
+                       f"page_peak={r['page_peak']};"
+                       f"savings={r['shared_page_savings']:.2f};"
+                       f"preemptions={r['preemptions']}")
         else:
             name = f"throughput/paged_{r['method']}_depth{r['depth']}"
             us = r["paged_time_s"] * 1e6 / max(r["paged_ticks"], 1)
@@ -345,3 +425,11 @@ if __name__ == "__main__":
               f"queue depth >= 8: {best['paged_speedup']:.2f}x "
               f"({best['method']}, depth {best['depth']}; >=1.5 target) "
               f"-> {verdict}")
+    for r in rows:
+        if r["kind"] == "fanout":
+            print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "
+                  f"{r['num_pages']} pages (broadcast needed "
+                  f"{r['broadcast_worst_pages_per_req']}/request — would "
+                  f"raise at submit), peak {r['page_peak']} pages, "
+                  f"{r['shared_page_savings']:.0%} shared-page savings, "
+                  f"{r['preemptions']} preemptions -> PASS")

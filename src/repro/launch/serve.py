@@ -126,6 +126,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         })
         if paged:
             out["page_utilization"] = tp["page_utilization"]
+            out["page_peak"] = tp["page_peak"]
+            out["preemptions"] = tp["preemptions"]
     if verbose:
         line = (f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
                 f"total_toks={out['total_tokens']:8.1f} "

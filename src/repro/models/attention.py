@@ -354,9 +354,34 @@ def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
     return y, new_cache
 
 
-def attn_decode_paged(p, x, pos, cache, block_tables, *, num_heads: int,
-                      num_kv_heads: int, head_dim: int, rope_theta: float,
-                      use_rope: bool):
+_PAGED_KERNEL: Optional[bool] = None
+
+
+def set_paged_kernel(flag: Optional[bool]) -> None:
+    """Force the paged flash-decode kernel on/off (None = auto: kernel on
+    TPU, jnp gather oracle under the Pallas interpreter / CPU). Tests set
+    True to run the wired kernel path through the interpreter.
+
+    The choice is captured at jit TRACE time: already-compiled callers
+    (e.g. the scheduler's cached decode step) keep whichever path they
+    were traced with — toggle before the first paged decode, or call
+    ``attn_decode_paged`` eagerly as the wiring test does. The auto
+    resolution is backend-based and stable for a process lifetime, so
+    this only matters for explicit mid-process toggles."""
+    global _PAGED_KERNEL
+    _PAGED_KERNEL = flag
+
+
+def use_paged_kernel() -> bool:
+    if _PAGED_KERNEL is not None:
+        return _PAGED_KERNEL
+    from repro.kernels import interpret_mode
+    return not interpret_mode()
+
+
+def attn_decode_paged(p, x, pos, cache, block_tables, write_pages=None, *,
+                      num_heads: int, num_kv_heads: int, head_dim: int,
+                      rope_theta: float, use_rope: bool):
     """One-token decode against a paged KV pool (global layers only).
 
     x: (B, 1, d); pos: (B,) int32 per-row positions; cache: page pool from
@@ -364,11 +389,17 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, num_heads: int,
     (B, MP) int32 mapping row-logical pages to physical pages (unowned
     entries alias the trash page — validity is purely ``kv_pos <= pos``).
 
-    The current token's K/V is written into the owning page, then the
-    row attends over its own pages gathered into a contiguous logical
-    view. The gather is the pure-jnp oracle path; on TPU the paged
-    flash-decode kernel (kernels/decode_attn) streams the pages directly
-    through the block table instead. Returns (y (B,1,d), new_cache)."""
+    The current token's K/V is written into ``write_pages`` ((B,) int32)
+    when given — the scheduler computes it from allocator truth via
+    ``PageAllocator.write_page``, which asserts each write page is
+    refcount-1, so with prefix sharing a decode write is provably
+    confined to unshared pages — else into the page the block table
+    names at ``pos`` (standalone callers own every page privately).
+    Attention then runs over the row's own pages: the gather below is
+    the pure-jnp CPU oracle; when :func:`use_paged_kernel` is true the
+    paged flash-decode kernel (kernels/decode_attn) streams the pages
+    directly through the block table instead.
+    Returns (y (B,1,d), new_cache)."""
     B = x.shape[0]
     G = num_heads // num_kv_heads
     q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
@@ -381,7 +412,10 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, num_heads: int,
     MP = block_tables.shape[1]
     lpage = pos // ps
     off = pos % ps
-    phys = jnp.take_along_axis(block_tables, lpage[:, None], axis=1)[:, 0]
+    if write_pages is None:
+        phys = jnp.take_along_axis(block_tables, lpage[:, None], axis=1)[:, 0]
+    else:
+        phys = jnp.asarray(write_pages)
 
     quant = _is_quantized(cache)
     new_cache = dict(cache)
@@ -394,6 +428,16 @@ def attn_decode_paged(p, x, pos, cache, block_tables, *, num_heads: int,
         kq, vq = k, v
     new_cache["k"] = cache["k"].at[phys, off].set(kq[:, 0].astype(cache["k"].dtype))
     new_cache["v"] = cache["v"].at[phys, off].set(vq[:, 0].astype(cache["v"].dtype))
+
+    if use_paged_kernel() and not quant:
+        # paged flash-decode kernel: the S-tile index map dereferences the
+        # block table, so only owned (and trash-aliased) pages stream
+        # through VMEM — no (B, MP*ps, ...) gather materialized in HBM
+        from repro.kernels.decode_attn.ops import paged_decode_attn
+        out = paged_decode_attn(q[:, 0], new_cache["k"], new_cache["v"],
+                                block_tables, pos)
+        y = out.astype(x.dtype).reshape(B, 1, num_heads * head_dim) @ p["wo"]
+        return y, new_cache
 
     # gather the row's pages into its contiguous logical sequence view
     ka = new_cache["k"][block_tables].reshape(B, MP * ps, num_kv_heads, head_dim)

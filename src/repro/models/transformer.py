@@ -259,11 +259,11 @@ def _block_prefill(p, cfg: ModelConfig, bt: str, x, positions, cache, enc_kv=Non
 
 
 def _block_decode(p, cfg: ModelConfig, bt: str, x, pos, cache, enc_kv=None,
-                  block_tables=None):
+                  block_tables=None, write_pages=None):
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if bt == "global" and block_tables is not None:
         y, new_cache = attn.attn_decode_paged(
-            p["attn"], h, pos, cache, block_tables,
+            p["attn"], h, pos, cache, block_tables, write_pages,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim,
             rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
@@ -612,7 +612,8 @@ def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
     return logits, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None):
+def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None,
+                write_pages=None):
     """One decode step. token: (B,) int32; pos: scalar int32 (absolute
     position of this token) or (B,) int32 per-row positions (continuous
     batching: pool rows belong to different requests).
@@ -620,6 +621,9 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None):
     ``block_tables`` ((B, MP) int32, optional) switches global-attention
     layers to the paged cache path: ``cache`` must then come from
     :func:`init_paged_cache` and ``pos`` must be per-row (DESIGN.md §5).
+    ``write_pages`` ((B,) int32, optional) pins each row's K/V write to an
+    allocator-certified refcount-1 page (the COW prefix-sharing guard);
+    when omitted the write page is derived from the block table.
     Returns (logits (B, V), new_cache)."""
     pattern = cfg.layer_pattern
     P = len(pattern)
@@ -647,7 +651,7 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None):
         for j, bt in enumerate(pattern):
             ekv = (xkvs[j]["k"], xkvs[j]["v"]) if xkvs is not None else None
             x, c = _block_decode(pslices[j], cfg, bt, x, pos, cslices[j], ekv,
-                                 block_tables)
+                                 block_tables, write_pages)
             newc.append(c)
         return x, tuple(newc)
 
@@ -670,7 +674,7 @@ def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None):
             xkv = cache["xkv_rem"][j]
             ekv = (xkv["k"], xkv["v"])
         x, c2 = _block_decode(bp, cfg, bt, x, pos, cache["rem"][j], ekv,
-                              block_tables)
+                              block_tables, write_pages)
         new_rem.append(c2)
 
     new_cache = {"stack": new_stack, "rem": tuple(new_rem)}

@@ -13,7 +13,8 @@ N → 2^⌈log2 N⌉-1 → … → 1 bounds recompilation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+import heapq
+from typing import Any, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +73,17 @@ def cache_bytes(cache) -> int:
                for leaf in jax.tree.leaves(cache))
 
 
-def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int) -> int:
+def _kv_itemsize(cfg) -> float:
+    """Per-element KV byte cost, quantization-aware (int8 values + the
+    amortized per-token-head fp32 scale)."""
+    it = jnp.dtype(cfg.dtype).itemsize
+    if cfg.kv_cache_dtype == "int8":
+        return 1.0 + 4.0 / cfg.resolved_head_dim
+    return it
+
+
+def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int, *,
+                     skip_global: bool = False) -> int:
     """Paged-allocator view of cache memory: bytes actually *referenced*
     with ``rows`` live branch rows after ``pos`` positions.
 
@@ -80,16 +91,17 @@ def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int) -> int:
     KV tensors; a TPU serving stack gets the same effect with a paged KV
     allocator (pages freed on branch prune / never allocated past pos).
     This analytic accounting is the static-shape analogue used for the
-    M_cost metric."""
+    M_cost metric. ``skip_global=True`` drops the global-attention term —
+    the paged scheduler charges that part from allocator truth instead
+    (owned pages × :func:`page_bytes`, shared pages once)."""
     it = jnp.dtype(cfg.dtype).itemsize
-    if cfg.kv_cache_dtype == "int8":
-        it_kv = 1.0 + 4.0 / cfg.resolved_head_dim  # int8 + amortized scale
-    else:
-        it_kv = it
+    it_kv = _kv_itemsize(cfg)
     hd = cfg.resolved_head_dim
     total = 0
     for bt in cfg.block_types():
         if bt == "global":
+            if skip_global:
+                continue
             total += rows * min(pos, max_seq) * cfg.num_kv_heads * hd * 2 * it_kv
         elif bt == "local":
             w = min(cfg.window_size, max_seq)
@@ -125,14 +137,26 @@ def per_request_bytes(cfg, rows_pos: Dict[Any, tuple], max_seq: int
 
 
 class PageAllocator:
-    """Host-side page bookkeeping for the shared device page pool.
+    """Host-side page bookkeeping for the shared device page pool,
+    with per-page reference counts for copy-on-write prefix sharing.
 
     ``num_pages`` allocatable physical pages of ``page_size`` token slots
     each; physical index ``num_pages`` is the shared *trash* page (the
     device pool is allocated with one extra page). Block tables are
     (rows, max_pages) int32 in *device form*: owned logical pages map to
     real physical pages, everything else aliases the trash page, so
-    attention validity stays purely positional (kv_pos <= pos)."""
+    attention validity stays purely positional (kv_pos <= pos).
+
+    ``ref`` counts how many block tables reference each physical page.
+    Fan-out branches alias the fully-written prompt pages (``ref`` = N)
+    and privately own everything they write (``ref`` = 1 — the COW
+    invariant :meth:`write_page` enforces); :meth:`free_row` returns a
+    page to the free list only when its last reference drops.
+
+    The free list is a min-heap: freeing is O(log F) per page (not a
+    full sort on the hot pruning path) and allocation always hands out
+    the smallest free physical id, so page placement is a deterministic
+    function of the alloc/free history."""
 
     def __init__(self, num_pages: int, page_size: int, rows: int,
                  max_pages: int):
@@ -143,9 +167,10 @@ class PageAllocator:
         self.trash = num_pages
         self.rows = rows
         self.max_pages = max_pages
-        self.free_pages: List[int] = list(range(num_pages))
+        self.free_pages: List[int] = list(range(num_pages))  # min-heap
         self.block = np.full((rows, max_pages), self.trash, np.int32)
-        self.owned = np.zeros((rows,), np.int32)
+        self.owned = np.zeros((rows,), np.int32)   # block-table entries/row
+        self.ref = np.zeros((num_pages,), np.int32)
 
     # ------------------------------------------------------------ queries
 
@@ -164,32 +189,93 @@ class PageAllocator:
     def can_alloc(self, n_pages: int) -> bool:
         return len(self.free_pages) >= n_pages
 
+    def row_pages(self, row: int) -> np.ndarray:
+        """Physical pages referenced by ``row``'s block table."""
+        return self.block[row, :int(self.owned[row])]
+
     # ---------------------------------------------------------- lifecycle
 
+    def alloc_pages(self, n_pages: int) -> List[int]:
+        """Pop ``n_pages`` free pages (smallest physical ids first). The
+        pages are unreferenced until installed into a block table via
+        :meth:`set_row_pages`."""
+        if not self.can_alloc(n_pages):
+            raise ValueError(f"out of pages: need {n_pages}, "
+                             f"free {len(self.free_pages)}")
+        return [heapq.heappop(self.free_pages) for _ in range(n_pages)]
+
+    def set_row_pages(self, row: int, pages: Sequence[int]) -> None:
+        """Install ``pages`` as ``row``'s block table (shared prefix pages
+        may appear in several rows' tables; each installation takes one
+        reference)."""
+        if self.owned[row]:
+            raise ValueError(f"row {row} already owns {self.owned[row]} pages")
+        if len(pages) > self.max_pages:
+            raise ValueError(f"{len(pages)} pages > max_pages={self.max_pages}")
+        n = len(pages)
+        self.block[row, :n] = pages
+        self.block[row, n:] = self.trash
+        self.owned[row] = n
+        for p in pages:
+            self.ref[int(p)] += 1
+
     def alloc_row(self, row: int, n_pages: int) -> np.ndarray:
-        """Hand ``n_pages`` pages to ``row``; returns the physical ids."""
+        """Hand ``n_pages`` fresh private pages to ``row``."""
         if self.owned[row]:
             raise ValueError(f"row {row} already owns {self.owned[row]} pages")
         if n_pages > self.max_pages:
             raise ValueError(f"{n_pages} pages > max_pages={self.max_pages}")
-        if not self.can_alloc(n_pages):
-            raise ValueError(f"out of pages: need {n_pages}, "
-                             f"free {len(self.free_pages)}")
-        pages = np.array(self.free_pages[:n_pages], np.int32)
-        del self.free_pages[:n_pages]
-        self.block[row, :n_pages] = pages
-        self.block[row, n_pages:] = self.trash
-        self.owned[row] = n_pages
+        pages = np.array(self.alloc_pages(n_pages), np.int32)
+        self.set_row_pages(row, pages)
         return pages
 
-    def free_row(self, row: int) -> None:
-        """Return every page ``row`` owns to the free list."""
+    def append_page(self, row: int) -> int:
+        """Lazy growth: hand ``row`` one more private page (the next
+        decode page, acquired when its position crosses a page
+        boundary)."""
         n = int(self.owned[row])
-        if n:
-            self.free_pages.extend(int(p) for p in self.block[row, :n])
-            self.free_pages.sort()
+        if n >= self.max_pages:
+            raise ValueError(f"row {row} already at max_pages={self.max_pages}")
+        p = self.alloc_pages(1)[0]
+        self.block[row, n] = p
+        self.owned[row] = n + 1
+        self.ref[p] = 1
+        return p
+
+    def free_row(self, row: int) -> None:
+        """Drop every reference ``row`` holds; pages whose last reference
+        this was go back on the free heap (O(log F) each)."""
+        for p in self.block[row, :int(self.owned[row])]:
+            p = int(p)
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                heapq.heappush(self.free_pages, p)
         self.block[row] = self.trash
         self.owned[row] = 0
+
+    # --------------------------------------------------------- COW guard
+
+    def write_page(self, rows: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """Physical page each of ``rows`` writes its token at ``pos`` into,
+        with the COW invariant enforced: the write page must be inside the
+        row's owned table AND referenced by that row alone (refcount 1) —
+        a decode write can never land on a page shared with a sibling
+        branch."""
+        rows = np.asarray(rows)
+        lp = np.asarray(pos) // self.page_size
+        if np.any(lp >= self.owned[rows]):
+            bad = rows[lp >= self.owned[rows]]
+            raise AssertionError(
+                f"rows {bad.tolist()} write past their allocated pages "
+                "(lazy growth missed a page-boundary crossing)")
+        phys = self.block[rows, lp]
+        shared = self.ref[phys] != 1
+        if np.any(shared):
+            raise AssertionError(
+                f"COW violation: rows {rows[shared].tolist()} would write "
+                f"to shared pages {phys[shared].tolist()} "
+                f"(refcounts {self.ref[phys][shared].tolist()})")
+        return phys.astype(np.int32)
 
 
 def _map_layer_entries(cfg, cache: Dict[str, Any], other: Dict[str, Any],
@@ -240,6 +326,51 @@ def install_paged(cfg, pool, row_idx, phys_flat, sub, page_size: int):
         return jax.tree.map(leaf_row, entry, sub_entry)
 
     return _map_layer_entries(cfg, pool, sub, per_entry)
+
+
+def install_paged_shared(cfg, pool, row_idx, src_idx, phys, sub1,
+                         page_size: int):
+    """Install a batch-1 prefill into the paged pool with prefix sharing —
+    no N-way ``broadcast_batch`` tile, no N-way scatter.
+
+    ``row_idx``: (n,) pool row slots receiving the request's branches.
+    ``src_idx``: (M,) logical source pages of the single prefilled row.
+    ``phys``: (M,) destination physical pages. Fully-written prompt pages
+    appear ONCE (all n branch block tables alias them); the partially-
+    written boundary page at ``prompt_len % page_size`` appears once per
+    branch, so each branch gets a private copy-on-write copy to receive
+    its divergent decode writes. Global leaves scatter the reshaped
+    (max_pages, page_size) prefill through that (src, phys) map; every
+    per-row leaf family (ring, recurrent, rwkv6, cross-KV) broadcasts the
+    batch-1 state into the n row slots."""
+    def per_entry(bt, is_stack, entry, sub_entry):
+        if bt == "global":
+            def leaf(a, b):
+                if is_stack:           # a: (K, P+1, ps, ...), b: (K, 1, S, ...)
+                    K, S = b.shape[0], b.shape[2]
+                    br = b[:, 0].reshape((K, S // page_size, page_size)
+                                         + b.shape[3:])
+                    return a.at[:, phys].set(br[:, src_idx].astype(a.dtype))
+                S = b.shape[1]
+                br = b[0].reshape((S // page_size, page_size) + b.shape[2:])
+                return a.at[phys].set(br[src_idx].astype(a.dtype))
+            return jax.tree.map(leaf, entry, sub_entry)
+
+        def leaf_row(a, b):            # b batch-1, broadcast over row_idx
+            return a.at[:, row_idx].set(b) if is_stack else a.at[row_idx].set(b)
+        return jax.tree.map(leaf_row, entry, sub_entry)
+
+    return _map_layer_entries(cfg, pool, sub1, per_entry)
+
+
+def page_bytes(cfg, page_size: int) -> int:
+    """Bytes one physical page holds across every global-attention layer
+    (K + V, quantization-aware) — the unit of the paged allocator's own
+    byte accounting."""
+    it_kv = _kv_itemsize(cfg)
+    n_global = sum(1 for bt in cfg.block_types() if bt == "global")
+    return int(n_global * page_size * cfg.num_kv_heads
+               * cfg.resolved_head_dim * 2 * it_kv)
 
 
 def bucket_chain(n: int) -> List[int]:

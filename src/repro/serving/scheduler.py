@@ -13,15 +13,19 @@ backends share one driver:
     slots regardless of the request's actual length.
   * :class:`PagedScheduler` — a paged KV pool (DESIGN.md §5): global
     attention layers share a page pool, rows hold ``(max_pages,)`` block
-    tables, admission is counted in *pages* sized to each request's own
-    ``prompt + max_new`` need, pruning returns pages to the free list
-    the moment it happens, and queued requests are admitted
-    shortest-job-first among those that fit.
+    tables, fan-out branches share the prompt pages copy-on-write,
+    decode pages are allocated lazily at page-boundary crossings (with
+    youngest-admitted preemption when the pool runs dry), pruning drops
+    page references the moment it happens, and queued requests are
+    admitted shortest-job-first with bounded bypass among those that
+    fit.
 
 Shared driver behaviour per tick:
 
   * admit whatever the backend's policy allows (prefill at batch 1,
-    broadcast to N rows, scatter/install into free row slots);
+    install into free row slots — the contiguous pool broadcasts inside
+    its scatter, the paged pool aliases shared prompt pages
+    copy-on-write across the N branch block tables);
   * one fused decode step over the whole pool with per-row positions;
   * ONE fused sampler dispatch for every active request's rows
     (per-row RNG keys — :func:`repro.serving.sampler.sample_rows`)
@@ -71,8 +75,8 @@ from repro.serving import strategies
 from repro.serving.strategies import GenResult
 
 _scatter = jax.jit(cache_lib.scatter_batch, donate_argnums=(0,))
-_install_paged = jax.jit(cache_lib.install_paged,
-                         static_argnums=(0, 5), donate_argnums=(1,))
+_install_shared = jax.jit(cache_lib.install_paged_shared,
+                          static_argnums=(0, 6), donate_argnums=(1,))
 _paged_step = jax.jit(decode_step, static_argnums=(1,), donate_argnums=(4,))
 
 
@@ -85,6 +89,7 @@ class _Queued:
     need: int                  # prompt + n_prefix + max_new token slots
     fan_out: int
     factory: Callable[[], strategies.DecodeStrategy]  # per-request strategy
+    bypasses: int = 0          # times a younger request was admitted first
 
 
 class _SchedulerBase:
@@ -132,6 +137,9 @@ class _SchedulerBase:
         self.queue: deque = deque()          # _Queued items
         self.active: Dict[int, tuple] = {}   # rid -> (RequestState, slots)
         self._slots_dev: Dict[int, object] = {}  # rid -> device slot idx
+        self._items: Dict[int, _Queued] = {}  # rid -> original submission
+        self._admit_seq: Dict[int, int] = {}  # rid -> admission order
+        self._admit_counter = 0
         self.results: Dict[int, GenResult] = {}
         self._next_rid = 0
         self.ticks = 0
@@ -146,7 +154,7 @@ class _SchedulerBase:
         # blocking transfer per tick, independent of active-request count)
         self.counters: Dict[str, int] = {
             "controller_dispatches": 0, "controller_syncs": 0,
-            "sampler_dispatches": 0, "host_syncs": 0,
+            "sampler_dispatches": 0, "host_syncs": 0, "preemptions": 0,
         }
         # per-tick wall-time breakdown (seconds, cumulative over run)
         self.tick_time: Dict[str, float] = {
@@ -167,8 +175,9 @@ class _SchedulerBase:
         """Queue index to admit next, or None. Defines the policy."""
         raise NotImplementedError
 
-    def _install(self, slots: List[int], item: _Queued, sub) -> None:
-        """Write a broadcast prefilled sub-cache into the row slots."""
+    def _install(self, slots: List[int], item: _Queued, sub1) -> None:
+        """Install the batch-1 prefilled sub-cache into the row slots
+        (fanning out / aliasing is the backend's storage policy)."""
         raise NotImplementedError
 
     def _release_storage(self, slots: List[int]) -> None:
@@ -232,8 +241,10 @@ class _SchedulerBase:
             bos_id=self.bos_id, max_seq=self.max_seq,
             n_prefix=self.n_prefix, frontend=self.frontend)
         self._maybe_pool_controller(rs, item)
-        sub = cache_lib.broadcast_batch(cache1, n) if n > 1 else cache1
-        self._install(slots, item, sub)
+        # backends install the batch-1 prefill directly (the paged pool
+        # aliases shared prompt pages; the contiguous pool broadcasts in
+        # the scatter) — no N-row broadcast_batch tile on this path
+        self._install(slots, item, cache1)
         rs.first_tokens(pf_logits)
         if rs.finished:  # e.g. greedy whose first token is already EOS
             self.results[item.rid] = rs.result()
@@ -242,6 +253,9 @@ class _SchedulerBase:
         else:
             self.active[item.rid] = (rs, slots)
             self._slots_dev[item.rid] = jnp.asarray(slots)
+            self._items[item.rid] = item    # kept for preemption requeue
+            self._admit_seq[item.rid] = self._admit_counter
+            self._admit_counter += 1
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
         return True
@@ -388,6 +402,8 @@ class _SchedulerBase:
                 self.results[rid] = rs.result()
                 del self.active[rid]
                 self._slots_dev.pop(rid, None)
+                self._items.pop(rid, None)
+                self._admit_seq.pop(rid, None)
                 rs.strategy.release_pool()
                 self._release(slots)
         self.tick_time["host"] += time.perf_counter() - t4
@@ -481,8 +497,10 @@ class ContinuousBatchingScheduler(_SchedulerBase):
             return 0
         return None
 
-    def _install(self, slots, item, sub) -> None:
-        self.pool = _scatter(self.pool, jnp.asarray(slots), sub)
+    def _install(self, slots, item, sub1) -> None:
+        # the batch-1 prefill broadcasts across the n slots inside the
+        # scatter itself — no separate N-row tile materialized
+        self.pool = _scatter(self.pool, jnp.asarray(slots), sub1)
 
     def _decode_tick(self):
         logits, self.pool = engine._model_step(
@@ -495,13 +513,26 @@ class PagedScheduler(_SchedulerBase):
     """Paged-pool scheduler (DESIGN.md §5).
 
     Global-attention KV lives in a shared page pool; each row addresses
-    it through a ``(max_pages,)`` block table. Admission reserves
-    ``fan_out × ceil(need / page_size)`` pages where ``need`` is the
-    request's own ``prompt + max_new`` — not the pool-wide ``max_seq`` —
-    and queued requests are admitted shortest-job-first among those whose
-    rows *and* pages fit (FIFO tie-break on equal need). Pruning a branch
-    returns its pages to the free list immediately; there is no
-    gather/compaction on this path.
+    it through a ``(max_pages,)`` block table. Fan-out branches *share*
+    the fully-written prompt pages copy-on-write: admission allocates
+    them once, aliases them into all N branch tables, and gives each
+    branch a private copy of the partially-written boundary page (where
+    divergent decode writes land) plus one decode page — so admission
+    costs ``prompt_pages + N × (1 + boundary)`` pages instead of
+    ``N × ceil(need / page_size)``. Decode pages are acquired *lazily*,
+    one page per row as its position crosses a page boundary; when the
+    free list runs dry the scheduler preempts the youngest-admitted
+    request (pages freed, request requeued and replayed from its
+    original RNG — token-for-token identical to an un-preempted run)
+    instead of deadlocking. Pruning a branch drops its page references
+    immediately; a page returns to the free heap when its last
+    reference goes.
+
+    Queued requests are admitted shortest-job-first among those whose
+    rows *and* initial pages fit (FIFO tie-break on equal need), with
+    bounded bypass: once the queue head has been bypassed
+    ``max_bypass`` times, it is admitted next or nothing is — a steady
+    stream of short submissions can no longer starve a long request.
 
     Parameters
     ----------
@@ -514,13 +545,15 @@ class PagedScheduler(_SchedulerBase):
         Defaults to ``rows * max_seq / page_size`` (no page pressure);
         set lower to serve more rows than a contiguous pool of the same
         byte budget could.
+    max_bypass : SJF aging bound (see above).
     """
 
     def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
                  rows: int, max_seq: int, page_size: int = 64,
                  num_pages: Optional[int] = None, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
-                 strategy_factory=None, fused_sampling: bool = True):
+                 strategy_factory=None, fused_sampling: bool = True,
+                 max_bypass: int = 4):
         max_seq = -(-max_seq // page_size) * page_size
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
@@ -530,20 +563,69 @@ class PagedScheduler(_SchedulerBase):
         self.max_pages = max_seq // page_size
         self.num_pages = num_pages if num_pages is not None \
             else rows * self.max_pages
+        self.max_bypass = max_bypass
         self.alloc = cache_lib.PageAllocator(self.num_pages, page_size,
                                              rows, self.max_pages)
         self.pool = init_paged_cache(cfg, rows, self.num_pages, page_size,
                                      max_seq)
         self._page_ticks = 0                 # Σ pages in use over ticks
+        self._page_peak = 0                  # max pages in use at any tick
         self._bt_dev = None                  # device block tables (cached)
+
+    # --------------------------------------------------- page accounting
+
+    def _prompt_pos(self, item: _Queued) -> int:
+        """First decode-write position (= installed prompt length)."""
+        return len(item.prompt) + self.n_prefix
+
+    def _shared_pages(self, item: _Queued) -> int:
+        """Prompt pages installed once from the prefill. With fan-out
+        N > 1 these are the fully-written pages all branches alias
+        read-only; a single-branch request has no sibling to share with,
+        so its partially-written boundary page is installed directly too
+        (it is refcount-1 either way — no COW copy needed)."""
+        pos0 = self._prompt_pos(item)
+        if item.fan_out == 1:
+            return self.alloc.pages_for(pos0)
+        return pos0 // self.page_size
+
+    def _boundary(self, item: _Queued) -> int:
+        """1 if each branch needs a private COW copy of a mid-page
+        prompt boundary, else 0 (page-aligned prompt, or fan-out 1 —
+        see :meth:`_shared_pages`)."""
+        if item.fan_out == 1:
+            return 0
+        return 1 if self._prompt_pos(item) % self.page_size else 0
+
+    def _priv_worst(self, item: _Queued) -> int:
+        """Private pages one branch can grow to (its ``need`` positions
+        minus the shared prompt pages)."""
+        return self.alloc.pages_for(item.need) - self._shared_pages(item)
+
+    def _initial_priv(self, item: _Queued) -> int:
+        """Private pages per branch at admission: the boundary COW copy
+        (if any) plus one decode page, capped at the branch's worst case
+        (a short request may never leave its boundary page)."""
+        return min(1 + self._boundary(item), self._priv_worst(item))
+
+    def _initial_pages(self, item: _Queued) -> int:
+        """Pages allocated at admission: shared prompt pages once, plus
+        each branch's initial private pages."""
+        return self._shared_pages(item) \
+            + item.fan_out * self._initial_priv(item)
+
+    def _worst_pages(self, item: _Queued) -> int:
+        """Lifetime peak with lazy growth: shared prompt pages once plus
+        each branch's private pages grown to cover ``need`` positions."""
+        return self._shared_pages(item) \
+            + item.fan_out * self._priv_worst(item)
 
     # ----------------------------------------------------------- storage
 
-    def _pages_per_row(self, item: _Queued) -> int:
-        return self.alloc.pages_for(item.need)
-
     def _check_servable(self, item: _Queued) -> None:
-        total = item.fan_out * self._pages_per_row(item)
+        # worst case must fit the pool ALONE: this is what guarantees
+        # preemption always unblocks growth (see _ensure_pages)
+        total = self._worst_pages(item)
         if total > self.num_pages:
             raise ValueError(
                 f"request needs {total} pages > pool num_pages="
@@ -551,46 +633,138 @@ class PagedScheduler(_SchedulerBase):
 
     def _admissible(self, item: _Queued) -> bool:
         return (len(self.free) >= item.fan_out
-                and self.alloc.can_alloc(item.fan_out
-                                         * self._pages_per_row(item)))
+                and self.alloc.can_alloc(self._initial_pages(item)))
 
     def _select_admit(self) -> Optional[int]:
-        # shortest-job-first among fitting requests, FIFO tie-break
+        # shortest-job-first among fitting requests, FIFO tie-break —
+        # with bounded bypass so a steady short stream cannot starve the
+        # oldest request: after max_bypass bypasses the head is admitted
+        # next-fit-or-nothing (admission pauses until it fits)
+        if not self.queue:
+            return None
+        head = self.queue[0]
+        if head.bypasses >= self.max_bypass:
+            return 0 if self._admissible(head) else None
         best, best_need = None, None
         for i, item in enumerate(self.queue):
             if self._admissible(item) and (best is None
                                            or item.need < best_need):
                 best, best_need = i, item.need
+        if best is not None:
+            for i in range(best):
+                self.queue[i].bypasses += 1
         return best
 
-    def _install(self, slots, item, sub) -> None:
-        pages = self._pages_per_row(item)
+    def _install(self, slots, item, sub1) -> None:
+        full = self._shared_pages(item)
+        boundary = self._boundary(item)
+        n_priv = self._initial_priv(item)
+        shared = self.alloc.alloc_pages(full)
+        # (src logical page -> dst physical page) scatter map: shared
+        # prompt pages once, the boundary page once per branch (its COW
+        # copy), nothing for the empty first decode page
+        src = list(range(full))
+        phys = list(shared)
         for s in slots:
-            self.alloc.alloc_row(s, pages)
+            priv = self.alloc.alloc_pages(n_priv)
+            if boundary:
+                src.append(full)
+                phys.append(priv[0])
+            self.alloc.set_row_pages(s, list(shared) + priv)
         self._bt_dev = None
-        phys_flat = jnp.asarray(self.alloc.block[slots].reshape(-1))
-        self.pool = _install_paged(self.cfg, self.pool,
-                                   jnp.asarray(slots), phys_flat, sub,
-                                   self.page_size)
+        self.pool = _install_shared(
+            self.cfg, self.pool, jnp.asarray(slots),
+            jnp.asarray(np.asarray(src, np.int32)),
+            jnp.asarray(np.asarray(phys, np.int32)), sub1, self.page_size)
 
     def _release_storage(self, slots) -> None:
         for s in slots:
             self.alloc.free_row(s)
         self._bt_dev = None
 
+    # ------------------------------------------- lazy growth / preemption
+
+    def _youngest_active(self) -> int:
+        return max(self.active, key=lambda r: self._admit_seq[r])
+
+    def _preempt(self, rid: int) -> None:
+        """Evict ``rid``: free its pages and rows, return its original
+        submission to the queue head. On re-admission it replays prefill
+        and decode from its original RNG stream, so the final tokens are
+        identical to a never-preempted run."""
+        rs, slots = self.active.pop(rid)
+        self._slots_dev.pop(rid, None)
+        self._admit_seq.pop(rid, None)
+        rs.strategy.release_pool()
+        self._release(slots)
+        self.queue.appendleft(self._items.pop(rid))
+        self.counters["preemptions"] += 1
+
+    def _ensure_pages(self) -> None:
+        """Lazy growth: before the fused decode step, every active row
+        whose position has crossed into an unallocated logical page
+        acquires the next page from the free heap. Requests grow in
+        admission order (oldest first); when the heap is empty the
+        youngest-admitted request is preempted — possibly the grower
+        itself, when everything younger is already gone."""
+        for rid in sorted(self.active, key=lambda r: self._admit_seq[r]):
+            if rid not in self.active:       # preempted below
+                continue
+            rs, slots = self.active[rid]
+            evicted = False
+            for s in slots:
+                lp = int(self.row_pos[s]) // self.page_size
+                while int(self.alloc.owned[s]) <= lp:
+                    if self.alloc.can_alloc(1):
+                        self.alloc.append_page(s)
+                        self._bt_dev = None
+                        continue
+                    victim = self._youngest_active()
+                    self._preempt(victim)
+                    if victim == rid:
+                        evicted = True
+                        break
+                if evicted:
+                    break
+
     def _decode_tick(self):
+        self._ensure_pages()
+        # COW guard: every active row's write page must be refcount-1
+        # (allocator truth); the certified pages are pinned into the
+        # decode step so a write physically cannot land on a shared page
+        wp = np.full((self.rows,), self.alloc.trash, np.int32)
+        occ = np.array([s for _, slots in self.active.values()
+                        for s in slots], np.int64)
+        if occ.size:
+            wp[occ] = self.alloc.write_page(occ, self.row_pos[occ])
         self._page_ticks += self.alloc.used_count
+        self._page_peak = max(self._page_peak, self.alloc.used_count)
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self.alloc.block)
         logits, self.pool = _paged_step(
             self.params, self.cfg, jnp.asarray(self.row_token),
-            jnp.asarray(self.row_pos), self.pool, self._bt_dev)
+            jnp.asarray(self.row_pos), self.pool, self._bt_dev,
+            jnp.asarray(wp))
         return logits
 
     # ----------------------------------------------------------- metrics
+
+    def request_bytes(self) -> Dict[int, int]:
+        """Per-request bytes from allocator truth: pages the request's
+        rows reference — shared prompt pages charged ONCE — times the
+        per-page byte cost, plus the analytic per-row cost of the
+        non-paged leaf families (ring / recurrent / rwkv6 / cross-KV)."""
+        pb = cache_lib.page_bytes(self.cfg, self.page_size)
+        out = {}
+        for rid, (rs, slots) in self.active.items():
+            pages = {int(p) for s in slots for p in self.alloc.row_pages(s)}
+            out[rid] = len(pages) * pb + cache_lib.used_cache_bytes(
+                self.cfg, len(slots), rs.pos, self.max_seq, skip_global=True)
+        return out
 
     def throughput(self) -> Dict[str, float]:
         out = super().throughput()
         out["page_utilization"] = (self._page_ticks
                                    / max(self.ticks * self.num_pages, 1))
+        out["page_peak"] = self._page_peak
         return out

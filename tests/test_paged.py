@@ -19,19 +19,25 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 # ---------------------------------------------------------- allocator
 
 def _check_invariants(alloc: PageAllocator):
-    """Free list and per-row ownership partition the physical pages."""
-    owned_pages = []
+    """Refcounts, free heap and block tables partition the physical
+    pages: every page's refcount equals the number of block-table
+    entries naming it, zero-ref pages are exactly the free ones (no
+    leak, no double-free)."""
+    refs = np.zeros((alloc.num_pages,), np.int64)
     for r in range(alloc.rows):
         n = int(alloc.owned[r])
         row_pages = alloc.block[r]
-        owned_pages.extend(int(p) for p in row_pages[:n])
         # owned prefix holds real pages, tail is all trash
         assert np.all(row_pages[:n] < alloc.num_pages)
         assert np.all(row_pages[n:] == alloc.trash)
-    assert len(set(owned_pages)) == len(owned_pages), "double-owned page"
-    assert set(owned_pages).isdisjoint(alloc.free_pages)
-    assert sorted(owned_pages + list(alloc.free_pages)) == \
-        list(range(alloc.num_pages))
+        for p in row_pages[:n]:
+            refs[int(p)] += 1
+    assert np.array_equal(refs, alloc.ref), "refcount drift"
+    free = set(alloc.free_pages)
+    assert len(free) == len(alloc.free_pages), "duplicate free page"
+    assert all(refs[p] == 0 for p in free), "freed page still referenced"
+    assert all(refs[p] > 0 for p in range(alloc.num_pages)
+               if p not in free), "leaked page (zero refs, not free)"
 
 
 def test_allocator_alloc_free_reuse():
@@ -88,6 +94,80 @@ def test_allocator_churn_integrity():
         alloc.free_row(r)
     _check_invariants(alloc)
     assert alloc.free_count == alloc.num_pages
+
+
+# --------------------------------------------------- COW / refcounts
+
+def test_allocator_cow_share_diverge_free():
+    """alloc -> share -> diverge -> free lifecycle: shared prompt pages
+    carry one refcount per aliasing row, private growth is refcount-1,
+    and a page returns to the free heap only on its LAST dereference."""
+    alloc = PageAllocator(16, 4, rows=4, max_pages=6)
+    shared = alloc.alloc_pages(2)               # prompt pages, shared by all
+    for r in range(4):
+        priv = alloc.alloc_pages(1)             # boundary COW copy
+        alloc.set_row_pages(r, list(shared) + priv)
+    _check_invariants(alloc)
+    assert all(alloc.ref[p] == 4 for p in shared)
+    assert alloc.used_count == 2 + 4            # shared counted once
+    # diverge: rows grow private decode pages lazily
+    for r in range(4):
+        alloc.append_page(r)
+    _check_invariants(alloc)
+    assert alloc.used_count == 2 + 8
+    # write pages are private (refcount 1): position 12 -> logical page 3
+    phys = alloc.write_page(np.arange(4), np.full((4,), 12))
+    assert len(set(int(p) for p in phys)) == 4
+    # writing into the shared prompt pages would violate COW
+    with pytest.raises(AssertionError):
+        alloc.write_page(np.array([0]), np.array([2]))  # logical page 0: shared
+    # writing past the owned table is a missed lazy-growth bug
+    with pytest.raises(AssertionError):
+        alloc.write_page(np.array([0]), np.array([16]))  # logical page 4
+    # free three rows: shared pages stay allocated (ref > 0)
+    for r in range(3):
+        alloc.free_row(r)
+        _check_invariants(alloc)
+    assert all(alloc.ref[p] == 1 for p in shared)
+    assert alloc.used_count == 2 + 2
+    alloc.free_row(3)                           # last reference frees them
+    _check_invariants(alloc)
+    assert alloc.free_count == alloc.num_pages
+
+
+def test_allocator_alloc_order_deterministic():
+    """The free list is a min-heap, not a sorted-on-every-free list:
+    allocation always hands out the smallest free ids, so two identical
+    alloc/free histories produce identical page placement."""
+    def churn(alloc):
+        trace = []
+        rng = np.random.RandomState(7)
+        live = set()
+        for _ in range(200):
+            if live and (rng.rand() < 0.5 or len(live) == alloc.rows):
+                r = int(rng.choice(sorted(live)))
+                alloc.free_row(r)
+                live.discard(r)
+            else:
+                r = int(rng.choice([i for i in range(alloc.rows)
+                                    if i not in live]))
+                n = int(rng.randint(1, alloc.max_pages + 1))
+                if alloc.can_alloc(n):
+                    trace.append(tuple(int(p) for p in alloc.alloc_row(r, n)))
+                    live.add(r)
+        return trace
+
+    a, b = (PageAllocator(24, 8, rows=10, max_pages=4) for _ in range(2))
+    assert churn(a) == churn(b)
+    assert np.array_equal(a.block, b.block)
+    assert sorted(a.free_pages) == sorted(b.free_pages)
+    # smallest-first: out-of-order frees still allocate lowest ids next
+    alloc = PageAllocator(8, 4, rows=4, max_pages=8)
+    for r in range(3):
+        alloc.alloc_row(r, 2)                   # rows own [0,1],[2,3],[4,5]
+    alloc.free_row(1)                           # heap: 2,3,6,7
+    alloc.free_row(0)                           # heap: 0,1,2,3,6,7
+    assert alloc.alloc_pages(3) == [0, 1, 2]
 
 
 # ----------------------------------------------------- paged decode step
@@ -280,6 +360,171 @@ def test_paged_out_of_pages_refusal(setup):
     assert sorted(sched.alloc.free_pages) == list(range(8))
 
 
+# ------------------------------------- COW prefix sharing / lazy alloc
+
+def test_shared_admission_page_accounting(setup):
+    """The acceptance property: admitting a fan-out-N request allocates
+    shared_prompt_pages + N x (boundary copy + 1 decode page) — NOT the
+    pre-PR N x ceil((prompt+max_new)/page_size) broadcast worst case —
+    and lazy growth never exceeds prompt_pages_shared + N x private
+    worst."""
+    cfg, params, kcfg, prompts, max_seq = setup
+    ps, N = 4, kcfg.num_branches
+    sched = PagedScheduler(params, cfg, kcfg, rows=4, max_seq=max_seq,
+                           page_size=ps, num_pages=64, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    sched.submit(prompts[0], jax.random.PRNGKey(0))
+    item = sched.queue[0]
+    pos0 = len(prompts[0])                       # 7: full=1, boundary=1
+    full, boundary = pos0 // ps, 1 if pos0 % ps else 0
+    assert sched._initial_pages(item) == full + N * (1 + boundary)
+    old_worst = N * sched.alloc.pages_for(item.need)
+    new_worst = sched._worst_pages(item)
+    assert new_worst == full + N * (sched.alloc.pages_for(item.need) - full)
+    assert new_worst < old_worst
+    assert sched._admit_one()
+    # exactly the initial reservation is allocated, prompt pages shared
+    assert sched.alloc.used_count == full + N * (1 + boundary)
+    shared_pages = [p for p in range(sched.num_pages)
+                    if sched.alloc.ref[p] == N]
+    assert len(shared_pages) == full
+    # every branch's write page is private (refcount 1)
+    slots = next(iter(sched.active.values()))[1]
+    wp = sched.alloc.write_page(np.asarray(slots), sched.row_pos[slots])
+    assert np.all(sched.alloc.ref[wp] == 1)
+    sched.run()
+    assert sched._page_peak <= new_worst
+    assert sched.alloc.free_count == sched.num_pages   # zero leaked pages
+    _check_invariants(sched.alloc)
+
+
+def test_shared_prompt_matches_broadcast_engine(setup):
+    """Branches aliasing shared prompt pages decode token-for-token
+    equal to the engine's broadcast-N dedicated cache (with forced page
+    pressure so lazy growth fires mid-request)."""
+    cfg, params, kcfg, prompts, max_seq = setup
+    seq = [engine.generate_kappa(params, cfg, kcfg, p, jax.random.PRNGKey(i),
+                                 eos_id=tok.EOS, bos_id=tok.BOS,
+                                 max_seq=max_seq)
+           for i, p in enumerate(prompts)]
+    sched = PagedScheduler(params, cfg, kcfg, rows=6, max_seq=max_seq,
+                           page_size=4, num_pages=26, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(p, jax.random.PRNGKey(i))
+            for i, p in enumerate(prompts)]
+    res = sched.run()
+    for s, rid in zip(seq, rids):
+        assert s.tokens == res[rid].tokens
+        assert s.chosen_branch == res[rid].chosen_branch
+        assert s.logical_tokens == res[rid].logical_tokens
+    assert sched.alloc.free_count == sched.num_pages
+    _check_invariants(sched.alloc)
+
+
+def test_fanout8_fits_budget_that_breaks_broadcast(setup):
+    """N=8 fan-out on a long prompt completes inside a num_pages budget
+    the pre-PR broadcast allocator could not even admit one request
+    into — and stays token-equal to the sequential engine."""
+    import dataclasses
+    cfg, params, kcfg, prompts, max_seq = setup
+    kcfg8 = dataclasses.replace(kcfg, num_branches=8)
+    prompt = np.concatenate([prompts[0], prompts[1][1:], prompts[2][1:]])
+    ps = 8
+    max_seq8 = len(prompt) + kcfg8.max_new_tokens
+    need = max_seq8
+    pages_req = -(-need // ps)
+    full = len(prompt) // ps
+    broadcast_worst = 8 * pages_req
+    shared_worst = full + 8 * (pages_req - full)
+    num_pages = shared_worst + 2
+    assert broadcast_worst > num_pages           # pre-PR submit would raise
+    seq = engine.generate_kappa(params, cfg, kcfg8, prompt,
+                                jax.random.PRNGKey(0), eos_id=tok.EOS,
+                                bos_id=tok.BOS, max_seq=max_seq8)
+    sched = PagedScheduler(params, cfg, kcfg8, rows=8, max_seq=max_seq8,
+                           page_size=ps, num_pages=num_pages, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rid = sched.submit(prompt, jax.random.PRNGKey(0))
+    res = sched.run()
+    assert seq.tokens == res[rid].tokens
+    assert seq.chosen_branch == res[rid].chosen_branch
+    assert sched._page_peak <= num_pages
+    assert sched.alloc.free_count == num_pages
+    _check_invariants(sched.alloc)
+
+
+def test_preemption_requeue_matches_unpreempted(setup):
+    """When lazy growth drains the pool, the youngest-admitted request
+    is preempted (pages freed, request requeued) and — replayed from its
+    original RNG — still produces exactly the tokens of an un-preempted
+    run."""
+    cfg, params, kcfg, prompts, max_seq = setup
+    seq = [engine.generate_bon(params, cfg, kcfg, p, jax.random.PRNGKey(i),
+                               eos_id=tok.EOS, bos_id=tok.BOS,
+                               max_seq=max_seq)
+           for i, p in enumerate(prompts[:2])]
+    # worst cases overlap: both admit on their initial pages, lazy
+    # growth then outruns the pool and forces a preemption
+    sched = PagedScheduler(params, cfg, kcfg, rows=8, max_seq=max_seq,
+                           page_size=4, num_pages=26, method="bon",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(p, jax.random.PRNGKey(i))
+            for i, p in enumerate(prompts[:2])]
+    res = sched.run()
+    assert sched.counters["preemptions"] >= 1
+    for s, rid in zip(seq, rids):
+        assert s.tokens == res[rid].tokens
+        assert s.chosen_branch == res[rid].chosen_branch
+        assert s.logical_tokens == res[rid].logical_tokens
+    assert sched.alloc.free_count == sched.num_pages
+    assert sorted(sched.free) == list(range(8))
+    _check_invariants(sched.alloc)
+
+
+def test_mixed_pool_drains_allocator(setup):
+    """Mixed-strategy pool churn (kappa prunes, bon releases EOS rows
+    eagerly, greedy holds one row) never double-frees or leaks: the free
+    heap returns to the full pool after run()."""
+    cfg, params, kcfg, prompts, max_seq = setup
+    specs = [("kappa", 20), ("bon", 12), ("greedy", 16), ("kappa", 8)]
+    sched = PagedScheduler(params, cfg, kcfg, rows=10, max_seq=max_seq,
+                           page_size=4, num_pages=48, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    for i, (m, mn) in enumerate(specs):
+        sched.submit(prompts[i % len(prompts)], jax.random.PRNGKey(i),
+                     max_new=mn, method=m)
+    res = sched.run()
+    assert len(res) == len(specs)
+    assert sched.alloc.free_count == sched.num_pages
+    assert sorted(sched.free) == list(range(10))
+    _check_invariants(sched.alloc)
+
+
+def test_paged_request_bytes_allocator_truth(setup):
+    """request_bytes() reports what the pool actually holds: distinct
+    referenced pages x per-page bytes (shared prompt pages charged once)
+    plus the analytic non-paged per-row state — not a contiguous
+    min(pos, max_seq) estimate."""
+    cfg, params, kcfg, prompts, max_seq = setup
+    ps, N = 4, kcfg.num_branches
+    sched = PagedScheduler(params, cfg, kcfg, rows=4, max_seq=max_seq,
+                           page_size=ps, num_pages=64, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rid = sched.submit(prompts[0], jax.random.PRNGKey(0))
+    assert sched._admit_one()
+    got = sched.request_bytes()[rid]
+    rs, slots = sched.active[rid]
+    pages = {int(p) for s in slots for p in sched.alloc.row_pages(s)}
+    pb = cache_lib.page_bytes(cfg, ps)
+    want = len(pages) * pb + cache_lib.used_cache_bytes(
+        cfg, len(slots), rs.pos, sched.max_seq, skip_global=True)
+    assert got == want
+    # sharing is visible: N branches cost less than N private copies
+    full = len(prompts[0]) // ps
+    assert len(pages) < N * (full + 2)
+    sched.run()
+
+
 def test_paged_sjf_admission_order(setup):
     """Among queued requests that fit, the paged scheduler picks the
     shortest job (fewest reserved pages), FIFO on ties — unlike the
@@ -296,3 +541,87 @@ def test_paged_sjf_admission_order(setup):
     # FIFO tie-break: equal-need requests admit in arrival order
     sched.queue[picked].need = sched.queue[2].need
     assert sched.queue[sched._select_admit()].rid == 1
+
+
+def _drive_with_short_stream(sched, long_rid, prompts, ticks):
+    """Tick the scheduler while feeding it a fresh short request every
+    tick; returns True iff the long request got admitted."""
+    for i in range(ticks):
+        if long_rid in sched._admit_seq or long_rid in sched.results:
+            return True
+        sched.submit(prompts[0], jax.random.PRNGKey(100 + i), max_new=4,
+                     method="greedy")
+        sched.tick()
+    return long_rid in sched._admit_seq or long_rid in sched.results
+
+
+def test_sjf_aging_prevents_starvation(setup):
+    """Regression for SJF starvation: under a steady stream of short
+    submissions a long request was bypassed forever. With bounded bypass
+    (after max_bypass bypasses the head admits next-fit-or-nothing) it
+    gets in; with the old unbounded policy (max_bypass=inf) it starves —
+    this test fails on the pre-fix policy."""
+    cfg, params, kcfg, prompts, max_seq = setup
+
+    long_prompt = np.concatenate([prompts[0], prompts[1][1:], prompts[2][1:]])
+
+    def build(max_bypass):
+        sched = PagedScheduler(params, cfg, kcfg, rows=4,
+                               max_seq=len(long_prompt) + 20,
+                               page_size=4, num_pages=11, method="greedy",
+                               eos_id=tok.EOS, bos_id=tok.BOS,
+                               max_bypass=max_bypass)
+        # two shorts occupy the pool first; then the long job (7 pages up
+        # front, 11 worst case) joins the queue — inadmissible whenever
+        # >= 2 of the streaming shorts (3 pages each) are in flight
+        for i in range(2):
+            sched.submit(prompts[0], jax.random.PRNGKey(50 + i), max_new=4,
+                         method="greedy")
+        long_rid = sched.submit(long_prompt, jax.random.PRNGKey(0),
+                                max_new=20, method="greedy")
+        return sched, long_rid
+
+    TICKS = 80
+    sched, long_rid = build(max_bypass=4)
+    assert _drive_with_short_stream(sched, long_rid, prompts, TICKS), \
+        "aged head request was never admitted"
+    # control: the unbounded-bypass policy starves the same request
+    sched, long_rid = build(max_bypass=10**9)
+    assert not _drive_with_short_stream(sched, long_rid, prompts, TICKS), \
+        "starvation scenario no longer reproduces - tighten the setup"
+
+
+# ----------------------------------------------- paged kernel wiring
+
+def test_attn_decode_paged_kernel_wiring(setup):
+    """attn_decode_paged routes through paged_decode_attn_pallas when
+    the kernel path is enabled (forced here, running the Pallas
+    interpreter on CPU) and matches the jnp gather oracle."""
+    from repro.models import attention as attn_mod
+    cfg, params, kcfg, prompts, _ = setup
+    ps, max_seq = 8, 32
+    MP = max_seq // ps
+    rows, num_pages = 3, 14
+    prompt = prompts[0]
+    _, c1 = engine._prefill_one(params, cfg, prompt, max_seq)
+
+    alloc = PageAllocator(num_pages, ps, rows, MP)
+    for r in range(rows):
+        alloc.alloc_row(r, MP)
+    pool = init_paged_cache(cfg, rows, num_pages, ps, max_seq)
+    pool = cache_lib.install_paged(
+        cfg, pool, jnp.arange(rows), jnp.asarray(alloc.block.reshape(-1)),
+        cache_lib.broadcast_batch(c1, rows), ps)
+
+    pos = jnp.array([len(prompt)] * rows, jnp.int32)
+    bt = jnp.asarray(alloc.block)
+    toks = jnp.array([5, 9, 7])
+    # eager (unjitted) calls so the kernel toggle takes effect per call
+    lo, _ = decode_step(params, cfg, toks, pos, pool, bt)
+    attn_mod.set_paged_kernel(True)
+    try:
+        lk, _ = decode_step(params, cfg, toks, pos, pool, bt)
+    finally:
+        attn_mod.set_paged_kernel(None)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lo),
+                               rtol=2e-5, atol=2e-5)
