@@ -90,7 +90,16 @@ def _mixed_max_new(depth: int):
 FANOUT_N = 8                    # high-fan-out COW scenario branches
 FANOUT_DEPTH = 6
 
-BREAKDOWN_KEYS = ("model", "sampler", "controller", "sync", "host")
+INTERLEAVE_CHUNK = 32           # prompt tokens per tick while decode runs
+INTERLEAVE_LONG = 1536          # long-prompt target length (tokens): the
+                                # whole-prompt prefill must dominate a
+                                # decode tick for the head-of-line stall
+                                # to be real (~10+ ticks at toy scale)
+INTERLEAVE_REPS = 3             # best-of-R (CPU wall-clock noise; rep 1
+                                # also absorbs jit compiles)
+
+BREAKDOWN_KEYS = ("model", "prefill", "sampler", "controller", "sync",
+                  "host")
 
 
 def _tick_breakdown_us(tp):
@@ -188,6 +197,104 @@ def _fanout_scenario(cfg, params):
     }]
 
 
+def _interleave_scenario(cfg, params):
+    """Part 4 (PR 5 acceptance): admit one LONG-prompt request while
+    >= 2 short requests are decoding. With one-shot admission the whole
+    prompt prefill lands inside a single tick — every in-flight request
+    stalls for it (a multi-tick-sized ITL spike). With chunked prefill
+    the admission advances ``INTERLEAVE_CHUNK`` tokens per tick inside
+    the decode tick, so in-flight ITL stays within ~1.2x of a
+    no-admission baseline and the long request's TTFT is reported.
+    Token streams are asserted identical between the two admission
+    modes (the final chunk's logits are bitwise-equal to the one-shot
+    prefill)."""
+    kcfg = _kcfg()
+    shorts = _prompts(3)
+    base = _prompts(160)
+    pieces, total = [base[0]], len(base[0])
+    for p in base[1:]:
+        if total >= INTERLEAVE_LONG:
+            break
+        pieces.append(p[1:])
+        total += len(p) - 1
+    long_p = np.concatenate(pieces)
+    max_seq = -(-(len(long_p) + common.MAX_NEW) // PAGE_SIZE) * PAGE_SIZE
+    num_pages = 8 * max_seq // PAGE_SIZE
+
+    def run_once(chunk, admit_long):
+        sched = PagedScheduler(params, cfg, kcfg, rows=8, max_seq=max_seq,
+                               page_size=PAGE_SIZE, num_pages=num_pages,
+                               method="greedy", eos_id=tok.EOS,
+                               bos_id=tok.BOS, prefill_chunk=chunk)
+        rids = [sched.submit(p, jax.random.PRNGKey(i),
+                             max_new=common.MAX_NEW, method="greedy")
+                for i, p in enumerate(shorts)]
+        for _ in range(200):        # warm: all shorts decoding steadily
+            sched.tick()
+            if all(r in sched.active and sched.active[r][0].step >= 4
+                   for r in rids):
+                break
+        t_admit = time.perf_counter()
+        rl = None
+        if admit_long:
+            rl = sched.submit(long_p, jax.random.PRNGKey(99), max_new=16,
+                              method="greedy")
+            # the admission window: ticks while the long prompt's
+            # prefill is in flight — where one-shot admission stalls
+            # every in-flight request for the whole prompt
+            while rl not in sched.active and rl not in sched.results:
+                sched.tick()
+        else:
+            # baseline window: plain decode ticks, sized like the
+            # chunked admission window so p99 sees comparable samples
+            for _ in range(-(-INTERLEAVE_LONG // INTERLEAVE_CHUNK)):
+                sched.tick()
+        t_end = time.perf_counter()
+        sched.run()
+        assert sched.alloc.free_count == sched.num_pages
+        itl = np.asarray([t1 - t0 for r in rids
+                          for t0, t1 in zip(sched.token_times[r],
+                                            sched.token_times[r][1:])
+                          if t_admit < t1 <= t_end] or [0.0])
+        return {
+            "itl_p50_s": float(np.percentile(itl, 50)),
+            "itl_p99_s": float(np.percentile(itl, 99)),
+            "itl_max_s": float(itl.max()),
+            "ttft_long_s": sched.ttft.get(rl),
+            "tokens": {r: sched.results[r].tokens for r in rids
+                       + ([rl] if rl is not None else [])},
+        }
+
+    # interleaved best-of-R (machine speed phases hit every mode; rep 1
+    # additionally absorbs the jit compiles of each mode's shapes)
+    runs = {"base": [], "oneshot": [], "chunked": []}
+    for _ in range(INTERLEAVE_REPS):
+        runs["base"].append(run_once(INTERLEAVE_CHUNK, admit_long=False))
+        runs["oneshot"].append(run_once(None, admit_long=True))
+        runs["chunked"].append(run_once(INTERLEAVE_CHUNK, admit_long=True))
+    base = min(runs["base"], key=lambda r: r["itl_p99_s"])
+    oneshot = min(runs["oneshot"], key=lambda r: r["itl_p99_s"])
+    chunked = min(runs["chunked"], key=lambda r: r["itl_p99_s"])
+    assert oneshot["tokens"] == chunked["tokens"], \
+        "chunked admission diverged from one-shot serving"
+    return [{
+        "kind": "interleave", "method": "greedy",
+        "in_flight": len(shorts), "long_prompt_len": len(long_p),
+        "prefill_chunk": INTERLEAVE_CHUNK, "page_size": PAGE_SIZE,
+        "baseline_itl_p99_s": base["itl_p99_s"],
+        "oneshot_itl_p99_s": oneshot["itl_p99_s"],
+        "chunked_itl_p99_s": chunked["itl_p99_s"],
+        "oneshot_itl_max_s": oneshot["itl_max_s"],
+        "chunked_itl_max_s": chunked["itl_max_s"],
+        "oneshot_ttft_long_s": oneshot["ttft_long_s"],
+        "chunked_ttft_long_s": chunked["ttft_long_s"],
+        "chunked_vs_baseline_itl_p99": chunked["itl_p99_s"]
+        / max(base["itl_p99_s"], 1e-9),
+        "oneshot_vs_baseline_itl_p99": oneshot["itl_p99_s"]
+        / max(base["itl_p99_s"], 1e-9),
+    }]
+
+
 def run(cfg, params):
     kcfg = _kcfg()
     fan_out = kcfg.num_branches
@@ -202,6 +309,12 @@ def run(cfg, params):
     max_seq = max(len(p) for p in warm) + kcfg.max_new_tokens
     for p in warm:
         engine._prefill_one(params, cfg, p, max_seq)
+        # admission prefills now run through PROMPT-sized transient
+        # caches (PR 5 sizing fix), so warm those shapes too — one per
+        # distinct prompt length per backend rounding
+        engine._prefill_one(params, cfg, p, len(p))
+        engine._prefill_one(params, cfg, p,
+                            -(-len(p) // PAGE_SIZE) * PAGE_SIZE)
 
     def warm_decode_shapes(ms):
         # BoN's eager EOS-row release means the sequential engine can hit
@@ -226,7 +339,9 @@ def run(cfg, params):
     warm_decode_shapes(max_seq)
     for method in BENCH_METHODS:
         _run_sequential(cfg, params, kcfg, method, warm[:1], max_seq)
-        _run_scheduled(cfg, params, kcfg, method, warm[:1], max_seq, rows_pool)
+        # full warm list: the install scatter is keyed on the transient
+        # cache's (prompt-sized) shape, one specialization per length
+        _run_scheduled(cfg, params, kcfg, method, warm, max_seq, rows_pool)
 
     for method in BENCH_METHODS:
         for depth in DEPTHS:
@@ -267,13 +382,13 @@ def run(cfg, params):
     for p in warm:
         engine._prefill_one(params, cfg, p, max_seq_p)
     warm_decode_shapes(max_seq_p)
-    warm_mixed = MIXED_MAX_NEW
+    warm_mixed = _mixed_max_new(len(warm))
     for method in PAGED_METHODS:
-        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+        _run_scheduled(cfg, params, kcfg, method, warm, max_seq_p,
                        rows_pool, max_news=warm_mixed)
-        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+        _run_scheduled(cfg, params, kcfg, method, warm, max_seq_p,
                        rows_pool, max_news=warm_mixed, fused_sampling=False)
-        _run_scheduled(cfg, params, kcfg, method, warm[:4], max_seq_p,
+        _run_scheduled(cfg, params, kcfg, method, warm, max_seq_p,
                        rows_paged, paged=True, max_news=warm_mixed,
                        page_size=PAGE_SIZE, num_pages=num_pages)
     for method in PAGED_METHODS:
@@ -350,6 +465,7 @@ def run(cfg, params):
                 "paged_controller_syncs": tp_p["controller_syncs"],
             })
     out.extend(_fanout_scenario(cfg, params))
+    out.extend(_interleave_scenario(cfg, params))
     return out
 
 
@@ -363,6 +479,14 @@ def emit_csv(rows):
                        f"cb_tok_s={r['cb_tokens_per_s']:.1f};"
                        f"speedup={r['speedup']:.2f};"
                        f"util={r['row_utilization']:.2f}")
+        elif r["kind"] == "interleave":
+            name = f"throughput/interleave_chunk{r['prefill_chunk']}"
+            us = r["chunked_itl_p99_s"] * 1e6
+            derived = (f"base_itl_p99_us={r['baseline_itl_p99_s'] * 1e6:.0f};"
+                       f"oneshot_itl_p99_us={r['oneshot_itl_p99_s'] * 1e6:.0f};"
+                       f"chunked_itl_p99_us={r['chunked_itl_p99_s'] * 1e6:.0f};"
+                       f"chunked_ratio={r['chunked_vs_baseline_itl_p99']:.2f};"
+                       f"ttft_long_s={r['chunked_ttft_long_s']:.3f}")
         elif r["kind"] == "fanout":
             name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
             us = r["time_s"] * 1e6 / max(r["ticks"], 1)
@@ -425,6 +549,25 @@ if __name__ == "__main__":
               f"queue depth >= 8: {best['paged_speedup']:.2f}x "
               f"({best['method']}, depth {best['depth']}; >=1.5 target) "
               f"-> {verdict}")
+    for r in rows:
+        if r["kind"] == "interleave":
+            ratio = r["chunked_vs_baseline_itl_p99"]
+            # "~1.2x": p99 over ~150 window samples rides 1-2 noise
+            # spikes on the CPU container (±20% run-to-run), so the
+            # hard gate sits at 1.35 and requires the one-shot stall to
+            # actually reproduce (>=2x) for the comparison to mean much
+            verdict = "PASS" if (ratio <= 1.35 and
+                                 r["oneshot_vs_baseline_itl_p99"] >= 2.0) \
+                else "FAIL"
+            print(f"# interleave: long-prompt ({r['long_prompt_len']} tok) "
+                  f"admission over {r['in_flight']} in-flight requests — "
+                  f"in-flight ITL p99 {r['baseline_itl_p99_s'] * 1e3:.1f}ms "
+                  f"baseline / {r['oneshot_itl_p99_s'] * 1e3:.1f}ms one-shot "
+                  f"/ {r['chunked_itl_p99_s'] * 1e3:.1f}ms chunked "
+                  f"({ratio:.2f}x baseline, <=1.2 target; one-shot "
+                  f"{r['oneshot_vs_baseline_itl_p99']:.2f}x); long TTFT "
+                  f"{r['chunked_ttft_long_s']:.3f}s chunked vs "
+                  f"{r['oneshot_ttft_long_s']:.3f}s one-shot -> {verdict}")
     for r in rows:
         if r["kind"] == "fanout":
             print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "

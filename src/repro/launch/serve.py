@@ -52,7 +52,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                params=None, cfg=None, verbose: bool = True,
                scheduler: bool = False, sched_rows: int | None = None,
                paged: bool = False, page_size: int = 64,
-               num_pages: int | None = None) -> dict:
+               num_pages: int | None = None,
+               prefill_chunk: int | None = None) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -79,7 +80,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         fan_out = factory().rows(kcfg)
         sched_kw = dict(rows=sched_rows or 2 * fan_out, max_seq=max_seq,
                         method=method, eos_id=tok.EOS, bos_id=tok.BOS,
-                        frontend=fe, strategy_factory=factory)
+                        frontend=fe, strategy_factory=factory,
+                        prefill_chunk=prefill_chunk)
         if paged:
             sched = PagedScheduler(params, cfg, kcfg, page_size=page_size,
                                    num_pages=num_pages, **sched_kw)
@@ -124,6 +126,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
             "row_utilization": tp["row_utilization"],
             "ticks": tp["ticks"],
         })
+        out["ttft_p99_s"] = tp["ttft_p99_s"]
+        out["itl_p99_s"] = tp["itl_p99_s"]
         if paged:
             out["page_utilization"] = tp["page_utilization"]
             out["page_peak"] = tp["page_peak"]
@@ -159,12 +163,17 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="allocatable KV pages for --paged (default: no "
                          "page pressure, rows*max_seq/page_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill size: admissions advance this "
+                         "many prompt tokens per tick interleaved with "
+                         "decode instead of one blocking whole-prompt "
+                         "prefill (scheduler paths only)")
     args = ap.parse_args(argv)
     serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
                ckpt=args.ckpt, max_new=args.max_new,
                scheduler=args.scheduler or args.paged, sched_rows=args.rows,
                paged=args.paged, page_size=args.page_size,
-               num_pages=args.num_pages)
+               num_pages=args.num_pages, prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

@@ -4,8 +4,9 @@ from repro.models.transformer import (
     init_paged_cache,
     init_params,
     prefill,
+    prefill_chunk,
     train_logits,
 )
 
 __all__ = ["init_params", "train_logits", "init_cache", "init_paged_cache",
-           "prefill", "decode_step"]
+           "prefill", "prefill_chunk", "decode_step"]

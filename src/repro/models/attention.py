@@ -354,6 +354,167 @@ def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
     return y, new_cache
 
 
+# ------------------------------------------------------------ chunk prefill
+#
+# Chunked prefill (DESIGN.md §6): a (B, C) slice of the prompt is run
+# against a cache that already holds each row's first pos0 tokens, so a
+# long admission advances one bounded chunk per scheduler tick instead
+# of stalling every decode row for the whole prompt. Keys are always
+# ordered by absolute position (history first, then the chunk), so the
+# causal mask only ever *trails* — masked slots contribute exact-0.0
+# terms after every real key, which is what keeps the final chunk's
+# logits bitwise equal to the one-shot prefill on the same positions.
+
+
+def _write_chunk_kv(cache, kq, vq, ks, vs, rows, slots, quant):
+    """Scatter a chunk's (B, C) K/V (and int8 scales) into per-row cache
+    slots. ``rows``: (B, 1); ``slots``: (B, C)."""
+    new = dict(cache)
+    new["k"] = cache["k"].at[rows, slots].set(kq.astype(cache["k"].dtype))
+    new["v"] = cache["v"].at[rows, slots].set(vq.astype(cache["v"].dtype))
+    if quant:
+        new["k_s"] = cache["k_s"].at[rows, slots].set(ks)
+        new["v_s"] = cache["v_s"].at[rows, slots].set(vs)
+    return new
+
+
+def attn_prefill_chunk(p, x, pos0, cache, *, hist_len: int, num_heads: int,
+                       num_kv_heads: int, head_dim: int, window: int,
+                       rope_theta: float, use_rope: bool):
+    """Chunk prefill against a contiguous (full or ring) cache.
+
+    x: (B, C, d); pos0: (B,) absolute position of each row's first chunk
+    token; the cache already holds positions < pos0. ``hist_len`` is the
+    static history slice bound for full caches (callers pass the exact
+    filled length, so no masked slot sits between real keys); ring
+    caches ignore it (their whole window is the history). Returns
+    (y (B, C, d), new_cache)."""
+    B, C, _ = x.shape
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    pos0 = jnp.asarray(pos0)
+    qpos = pos0[:, None] + jnp.arange(C)                       # (B, C)
+    if use_rope:
+        q = apply_rope(q, qpos, rope_theta)
+        k = apply_rope(k, qpos, rope_theta)
+
+    W = cache["k"].shape[1]
+    is_ring = window > 0 and W <= window
+    quant = _is_quantized(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+    else:
+        kq, vq, ks, vs = k, v, None, None
+    rows = jnp.arange(B)[:, None]
+
+    if is_ring:
+        # history = the whole ring as it stands before this chunk
+        hist_pos = ring_slot_positions(pos0[:, None] - 1, W)   # (B, W)
+        hk, hv = cache["k"], cache["v"]
+        if quant:
+            hk = _dequantize_kv(hk, cache["k_s"], x.dtype)
+            hv = _dequantize_kv(hv, cache["v_s"], x.dtype)
+        kv_pos = jnp.concatenate([hist_pos, qpos], axis=1)     # (B, W + C)
+        ka = jnp.concatenate([hk, k], axis=1)
+        va = jnp.concatenate([hv, v], axis=1)
+        valid = kv_pos >= 0
+        # write the chunk's last min(C, W) tokens (their slots are
+        # distinct mod W; older chunk tokens would be overwritten anyway)
+        if C > W:
+            wslots = jnp.mod(qpos[:, -W:], W)
+            kw, vw = kq[:, -W:], vq[:, -W:]
+            ksw = ks[:, -W:] if quant else None
+            vsw = vs[:, -W:] if quant else None
+        else:
+            wslots, kw, vw, ksw, vsw = jnp.mod(qpos, W), kq, vq, ks, vs
+        new_cache = _write_chunk_kv(cache, kw, vw, ksw, vsw, rows, wslots,
+                                    quant)
+    else:
+        hk, hv = cache["k"][:, :hist_len], cache["v"][:, :hist_len]
+        if quant:
+            hk = _dequantize_kv(hk, cache["k_s"][:, :hist_len], x.dtype)
+            hv = _dequantize_kv(hv, cache["v_s"][:, :hist_len], x.dtype)
+        hist_pos = jnp.broadcast_to(jnp.arange(hist_len), (B, hist_len))
+        kv_pos = jnp.concatenate([hist_pos, qpos], axis=1)     # (B, H + C)
+        ka = jnp.concatenate([hk, k], axis=1)
+        va = jnp.concatenate([hv, v], axis=1)
+        # history slots at/after pos0 hold garbage (or other rows' data)
+        valid = kv_pos < pos0[:, None]
+        valid = valid.at[:, hist_len:].set(True)
+        new_cache = _write_chunk_kv(cache, kq, vq, ks, vs, rows, qpos, quant)
+
+    mask = valid[:, None, :] & (kv_pos[:, None, :] <= qpos[:, :, None])
+    if window > 0:
+        mask &= (qpos[:, :, None] - kv_pos[:, None, :]) < window
+    mask = mask[:, None, None]                                 # (B,1,1,C,S)
+
+    qr = q.reshape(B, C, num_kv_heads, G, head_dim)
+    out = _attend(qr, ka, va, mask)
+    y = out.reshape(B, C, num_heads * head_dim) @ p["wo"]
+    return y, new_cache
+
+
+def attn_prefill_chunk_paged(p, x, pos0, cache, block_tables, chunk_pages, *,
+                             num_heads: int, num_kv_heads: int,
+                             head_dim: int, rope_theta: float,
+                             use_rope: bool):
+    """Chunk prefill writing straight into allocator-owned pages — no
+    batch-1 side cache for the global layers (DESIGN.md §6).
+
+    x: (B, C, d); pos0: (B,); cache: page pool from :func:`init_paged_kv`;
+    block_tables: (B, MP) the rows' tables (prompt pages so far, trash
+    elsewhere); chunk_pages: (B, C) physical page of each chunk token
+    (all refcount-1 during prefill — the allocator hands them out before
+    the chunk runs). Attention gathers the row's pages exactly like the
+    decode oracle; validity is purely positional. Returns
+    (y (B, C, d), new_cache)."""
+    B, C, _ = x.shape
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, num_heads, num_kv_heads, head_dim)
+    pos0 = jnp.asarray(pos0)
+    qpos = pos0[:, None] + jnp.arange(C)                       # (B, C)
+    if use_rope:
+        q = apply_rope(q, qpos, rope_theta)
+        k = apply_rope(k, qpos, rope_theta)
+
+    ps = cache["k"].shape[1]
+    MP = block_tables.shape[1]
+    off = jnp.mod(qpos, ps)
+    quant = _is_quantized(cache)
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache["k_s"] = cache["k_s"].at[chunk_pages, off].set(ks)
+        new_cache["v_s"] = cache["v_s"].at[chunk_pages, off].set(vs)
+    else:
+        kq, vq = k, v
+    new_cache["k"] = cache["k"].at[chunk_pages, off].set(
+        kq.astype(cache["k"].dtype))
+    new_cache["v"] = cache["v"].at[chunk_pages, off].set(
+        vq.astype(cache["v"].dtype))
+
+    ka = new_cache["k"][block_tables].reshape(B, MP * ps, num_kv_heads,
+                                              head_dim)
+    va = new_cache["v"][block_tables].reshape(B, MP * ps, num_kv_heads,
+                                              head_dim)
+    if quant:
+        ksa = new_cache["k_s"][block_tables].reshape(B, MP * ps, num_kv_heads)
+        vsa = new_cache["v_s"][block_tables].reshape(B, MP * ps, num_kv_heads)
+        ka = _dequantize_kv(ka, ksa, x.dtype)
+        va = _dequantize_kv(va, vsa, x.dtype)
+
+    kv_pos = jnp.arange(MP * ps)
+    mask = kv_pos[None, None, :] <= qpos[:, :, None]           # (B, C, S)
+    mask = mask[:, None, None]
+
+    qr = q.reshape(B, C, num_kv_heads, G, head_dim)
+    out = _attend(qr, ka, va, mask)
+    y = out.reshape(B, C, num_heads * head_dim) @ p["wo"]
+    return y, new_cache
+
+
 _PAGED_KERNEL: Optional[bool] = None
 
 

@@ -612,6 +612,136 @@ def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
     return logits, new_cache
 
 
+def _block_prefill_chunk(p, cfg: ModelConfig, bt: str, x, pos0, centry,
+                         aentry, *, hist_len: int, block_tables,
+                         chunk_pages):
+    """One block over a (B, C) prompt chunk. ``centry`` is the block's
+    main-cache entry (contiguous cache, or the paged pool); ``aentry``
+    is the batch-1 aux entry holding the per-row families' state in
+    paged mode (None in contiguous mode, where ``centry`` holds it).
+    Returns (x, new_centry, new_aentry)."""
+    paged = block_tables is not None
+    own = aentry if (paged and bt != "global") else centry
+    new_c, new_a = centry, aentry
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if bt in ("global", "local"):
+        if paged and bt == "global":
+            y, new_c = attn.attn_prefill_chunk_paged(
+                p["attn"], h, pos0, centry, block_tables, chunk_pages,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                use_rope=cfg.use_rope)
+        else:
+            y, s_new = attn.attn_prefill_chunk(
+                p["attn"], h, pos0, own, hist_len=hist_len,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, window=_window_of(cfg, bt),
+                rope_theta=cfg.rope_theta, use_rope=cfg.use_rope)
+            if paged:
+                new_a = s_new
+            else:
+                new_c = s_new
+        x = x + y
+    elif bt == "recurrent":
+        y, s_new = rglru_lib.rglru_forward(p["rec"], h, own)
+        x = x + y
+        if paged:
+            new_a = s_new
+        else:
+            new_c = s_new
+    elif bt == "rwkv6":
+        y, tm = rwkv6_lib.time_mix(p["mix"], h, own, num_heads=cfg.num_heads,
+                                   head_dim=cfg.resolved_head_dim)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y2, cm = rwkv6_lib.channel_mix(p["mix"], h2, own)
+        s_new = {**tm, **cm}
+        if paged:
+            new_a = s_new
+        else:
+            new_c = s_new
+        return x + y2, new_c, new_a
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y2, _ = _ffn_apply(p, cfg, h2)
+    return x + y2, new_c, new_a
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, pos0, hist_len: int,
+                  cache, block_tables=None, chunk_pages=None, aux=None):
+    """Advance the caches over one (B, C) prompt chunk whose first token
+    sits at per-row absolute position ``pos0`` (DESIGN.md §6).
+
+    Contiguous mode (``block_tables`` None): ``cache`` is a batch-B
+    cache already holding each row's first ``pos0`` tokens; ``hist_len``
+    is the static history slice length for full-attention layers
+    (callers pass the exact filled length so the key sequence stays
+    zero-gap — the bitwise-equality precondition).
+
+    Paged mode: ``cache`` is the paged pool; global layers write the
+    chunk's K/V straight into allocator-owned pages (``chunk_pages``,
+    (B, C)) and attend through ``block_tables`` (B, MP); the per-row
+    families (ring / recurrent / rwkv6) thread their state through the
+    batch-1 ``aux`` cache, installed into the row slots when prefill
+    completes. Encoder-decoder and frontend-prefixed models are not
+    supported (callers fall back to one-shot prefill).
+
+    Returns (last-position logits (B, V), new_cache, new_aux)."""
+    if cfg.is_encoder_decoder:
+        raise ValueError("chunked prefill does not support encoder-decoder "
+                         "models (use one-shot prefill)")
+    paged = block_tables is not None
+    pattern = cfg.layer_pattern
+    P = len(pattern)
+    x = embed(tokens, params["embed"])
+    pos0 = jnp.asarray(pos0)
+
+    def fn_cycle(x, slices):
+        if paged:
+            pslices, cslices, aslices = slices
+        else:
+            pslices, cslices = slices
+            aslices = (None,) * P
+        newc, newa = [], []
+        for j, bt in enumerate(pattern):
+            x, c, a = _block_prefill_chunk(
+                pslices[j], cfg, bt, x, pos0, cslices[j], aslices[j],
+                hist_len=hist_len, block_tables=block_tables,
+                chunk_pages=chunk_pages)
+            newc.append(c)
+            newa.append(a)
+        return x, (tuple(newc), tuple(newa)) if paged else tuple(newc)
+
+    K = cfg.num_layers // P
+    ys = None
+    if K > 0:
+        xs = (params["stack"], cache["stack"], aux["stack"]) if paged \
+            else (params["stack"], cache["stack"])
+        x, ys = _scan_maybe(fn_cycle, x, xs, cfg.unroll)
+
+    new_rem, new_arem = [], []
+    for j, bp in enumerate(params["rem"]):
+        bt = pattern[j % P]
+        aentry = aux["rem"][j] if paged else None
+        x, c, a = _block_prefill_chunk(
+            bp, cfg, bt, x, pos0, cache["rem"][j], aentry,
+            hist_len=hist_len, block_tables=block_tables,
+            chunk_pages=chunk_pages)
+        new_rem.append(c)
+        new_arem.append(a)
+
+    if paged:
+        new_cache = {"stack": ys[0] if ys is not None else (),
+                     "rem": tuple(new_rem)}
+        new_aux = {"stack": ys[1] if ys is not None else (),
+                   "rem": tuple(new_arem)}
+    else:
+        new_cache = {"stack": ys if ys is not None else (),
+                     "rem": tuple(new_rem)}
+        new_aux = None
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, new_cache, new_aux
+
+
 def decode_step(params, cfg: ModelConfig, token, pos, cache, block_tables=None,
                 write_pages=None):
     """One decode step. token: (B,) int32; pos: scalar int32 (absolute

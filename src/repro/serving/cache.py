@@ -57,6 +57,26 @@ def scatter_batch(pool, idx, sub):
                          lambda a, b: a.at[idx].set(b))
 
 
+def scatter_batch_prefix(pool, idx, sub):
+    """Like :func:`scatter_batch`, but ``sub``'s leaves may be *shorter*
+    than the pool's on their non-batch axes (a prompt-sized prefill
+    cache installed into max_seq-sized pool rows): each leaf writes only
+    its own extent, leaving the rows' tails untouched. Stale data beyond
+    a request's written positions is never read — decode writes position
+    p before attending with ``kv_pos <= p``, and ring-slot validity
+    masks unwritten slots. ``sub`` may be batch-1 (broadcast into all
+    ``idx`` rows) or match ``len(idx)``."""
+    def st(a, b):
+        sl = (slice(None), idx) + tuple(slice(0, s) for s in b.shape[2:])
+        return a.at[sl].set(b)
+
+    def rm(a, b):
+        sl = (idx,) + tuple(slice(0, s) for s in b.shape[1:])
+        return a.at[sl].set(b)
+
+    return _map_batched2(pool, sub, st, rm)
+
+
 def broadcast_batch(cache, n: int):
     """Replicate a batch-1 cache to n branches (post-prefill fan-out)."""
     def rep(a, axis):
@@ -361,6 +381,49 @@ def install_paged_shared(cfg, pool, row_idx, src_idx, phys, sub1,
         return jax.tree.map(leaf_row, entry, sub_entry)
 
     return _map_layer_entries(cfg, pool, sub1, per_entry)
+
+
+def copy_pages(cfg, pool, src_pages, dst_pages):
+    """Device page copy inside the paged pool's global-attention leaves:
+    ``dst_pages[i] <- src_pages[i]``. Used when chunked prefill
+    finalizes a fan-out admission — each sibling branch gets a private
+    copy-on-write duplicate of the partially-written prompt boundary
+    page the prefill wrote (DESIGN.md §6)."""
+    def per_entry(bt, is_stack, entry, _):
+        if bt != "global":
+            return entry
+
+        def leaf(a):
+            if is_stack:
+                return a.at[:, dst_pages].set(a[:, src_pages])
+            return a.at[dst_pages].set(a[src_pages])
+        return jax.tree.map(leaf, entry)
+
+    return _map_layer_entries(cfg, pool, pool, per_entry)
+
+
+def install_rows_aux(cfg, pool, row_idx, aux):
+    """Install a batch-1 aux cache's per-row leaf families (ring /
+    recurrent / rwkv6 / cross-KV state threaded through chunked prefill)
+    into the paged pool's ``row_idx`` slots, broadcasting across the
+    fan-out. Global-attention leaves are untouched — their prompt K/V
+    already lives in allocator-owned pages (DESIGN.md §6). Aux leaves
+    shorter than the pool's (a ring sized to a short prompt) write only
+    their own extent, like :func:`scatter_batch_prefix`."""
+    def per_entry(bt, is_stack, entry, aux_entry):
+        if bt == "global":
+            return entry
+
+        def leaf(a, b):
+            if is_stack:
+                sl = (slice(None), row_idx) + tuple(slice(0, s)
+                                                    for s in b.shape[2:])
+            else:
+                sl = (row_idx,) + tuple(slice(0, s) for s in b.shape[1:])
+            return a.at[sl].set(b)
+        return jax.tree.map(leaf, entry, aux_entry)
+
+    return _map_layer_entries(cfg, pool, aux, per_entry)
 
 
 def page_bytes(cfg, page_size: int) -> int:

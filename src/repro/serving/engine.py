@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.configs.base import KappaConfig, ModelConfig
 from repro.core import kappa as kappa_lib
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.serving import cache as cache_lib
 from repro.serving import sampler
 from repro.serving import strategies
@@ -45,12 +45,74 @@ from repro.serving.strategies import GenResult  # noqa: F401  (public API)
 
 _prefill_jit = jax.jit(prefill, static_argnums=(1,))
 
+# chunked-prefill steps (DESIGN.md §6). hist_len is static: each chunk
+# index is its own specialization, bounded by ceil(max_seq / chunk) and
+# shared across requests of equal chunking — the same trade prefill
+# already makes by being keyed on prompt length. The paged variant
+# donates the pool AND the batch-1 aux state so chunk k+1 reuses chunk
+# k's buffers.
+_prefill_chunk_contig = jax.jit(prefill_chunk, static_argnums=(1, 4),
+                                donate_argnums=(5,))
+_prefill_chunk_paged = jax.jit(prefill_chunk, static_argnums=(1, 4),
+                               donate_argnums=(5, 8))
+
+
+def fused_decode_chunk(params, cfg: ModelConfig, token, pos, cache,
+                       block_tables, write_pages, chunk_tokens, chunk_pos0,
+                       chunk_bt, chunk_pages, aux):
+    """ONE device program advancing the whole decode pool AND one
+    PREFILLING request's next prompt chunk (DESIGN.md §6): the chunk
+    rides the tick's existing dispatch, so interleaved admission adds
+    chunk *compute* to a tick but no second host dispatch. The two
+    halves touch disjoint pool state — decode writes its rows'
+    allocator-certified pages, the chunk writes its own refcount-1
+    prompt pages and the batch-1 aux state."""
+    logits, cache = decode_step(params, cfg, token, pos, cache,
+                                block_tables, write_pages)
+    clogits, cache, aux = prefill_chunk(params, cfg, chunk_tokens,
+                                        chunk_pos0, 0, cache, chunk_bt,
+                                        chunk_pages, aux)
+    return logits, clogits, cache, aux
+
+
+_fused_decode_chunk = jax.jit(fused_decode_chunk, static_argnums=(1,),
+                              donate_argnums=(4, 11))
+
 
 def _prefill_one(params, cfg: ModelConfig, prompt: np.ndarray, max_seq: int,
                  frontend=None):
     cache = init_cache(cfg, 1, max_seq)
     logits, cache = _prefill_jit(params, cfg, jnp.asarray(prompt)[None],
                                  cache, frontend)
+    return logits[0], cache
+
+
+def chunkable(cfg: ModelConfig, frontend=None) -> bool:
+    """Whether chunked prefill applies: no encoder (the whisper decoder
+    prefill needs the whole encoder pass anyway) and no frontend prefix
+    tokens (patch embeddings are not chunkable token streams)."""
+    return frontend is None and not cfg.frontend and not cfg.is_encoder_decoder
+
+
+def prefill_chunked(params, cfg: ModelConfig, prompt: np.ndarray,
+                    max_seq: int, chunk: int):
+    """One-request chunked prefill of a batch-1 contiguous cache: the
+    engine-loop twin of the scheduler's PREFILLING state. Returns
+    (last-position logits (V,), cache) — with an all-'global' /
+    'rwkv6' / 'recurrent' layer pattern the logits are bitwise equal to
+    :func:`_prefill_one`'s; sliding-window layers are allclose (the ring
+    holds the same keys in a different chunk arrangement)."""
+    if chunk < 1:
+        raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
+    if not chunkable(cfg):
+        raise ValueError("model is not chunkable (frontend / enc-dec)")
+    cache = init_cache(cfg, 1, max_seq)
+    logits = None
+    for s in range(0, len(prompt), chunk):
+        piece = np.asarray(prompt[s:s + chunk])
+        logits, cache, _ = _prefill_chunk_contig(
+            params, cfg, jnp.asarray(piece)[None],
+            jnp.full((1,), s, jnp.int32), s, cache)
     return logits[0], cache
 
 
@@ -71,12 +133,20 @@ def _decode_loop(params, cfg: ModelConfig, kcfg: KappaConfig,
                  prompt: np.ndarray, rng,
                  strategy: strategies.DecodeStrategy, *, eos_id: int,
                  bos_id: int = 0, max_seq: Optional[int] = None,
-                 frontend=None) -> GenResult:
-    """Drive one request to completion with a dedicated branch cache."""
+                 frontend=None,
+                 prefill_chunk: Optional[int] = None) -> GenResult:
+    """Drive one request to completion with a dedicated branch cache.
+    ``prefill_chunk`` switches the prompt phase to the chunked path the
+    scheduler uses — the loop-parity knob for DESIGN.md §6."""
     n_prefix = _n_prefix(cfg)
     max_seq = max_seq or (len(prompt) + kcfg.max_new_tokens + n_prefix)
 
-    pf_logits, cache = _prefill_one(params, cfg, prompt, max_seq, frontend)
+    if prefill_chunk is not None and chunkable(cfg, frontend):
+        pf_logits, cache = prefill_chunked(params, cfg, prompt, max_seq,
+                                           prefill_chunk)
+    else:
+        pf_logits, cache = _prefill_one(params, cfg, prompt, max_seq,
+                                        frontend)
     rs = strategies.RequestState(
         strategy, params, cfg, kcfg, len(prompt), rng, eos_id=eos_id,
         bos_id=bos_id, max_seq=max_seq, n_prefix=n_prefix, frontend=frontend)

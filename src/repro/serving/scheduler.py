@@ -22,10 +22,19 @@ backends share one driver:
 
 Shared driver behaviour per tick:
 
-  * admit whatever the backend's policy allows (prefill at batch 1,
-    install into free row slots — the contiguous pool broadcasts inside
-    its scatter, the paged pool aliases shared prompt pages
-    copy-on-write across the N branch block tables);
+  * admit whatever the backend's policy allows. With ``prefill_chunk``
+    set, admission enters a **PREFILLING** state (DESIGN.md §6): the
+    request owns its row slots (and, paged, the pages written so far)
+    and advances one prompt chunk per tick — the oldest one *inside*
+    the fused decode dispatch itself — so decode rows never stall for
+    more than one chunk's latency on a long-prompt admission; the final
+    chunk's logits are bitwise-equal to the one-shot prefill and feed
+    the same strategy start path. Without chunking (or for
+    frontend/enc-dec requests) admission falls back to a one-shot
+    batch-1 prefill through a transient cache sized to the prompt (the
+    contiguous pool broadcasts inside its install scatter, the paged
+    pool aliases shared prompt pages copy-on-write across the N branch
+    block tables);
   * one fused decode step over the whole pool with per-row positions;
   * ONE fused sampler dispatch for every active request's rows
     (per-row RNG keys — :func:`repro.serving.sampler.sample_rows`)
@@ -74,10 +83,14 @@ from repro.serving import sampler
 from repro.serving import strategies
 from repro.serving.strategies import GenResult
 
-_scatter = jax.jit(cache_lib.scatter_batch, donate_argnums=(0,))
+_scatter = jax.jit(cache_lib.scatter_batch_prefix, donate_argnums=(0,))
 _install_shared = jax.jit(cache_lib.install_paged_shared,
                           static_argnums=(0, 6), donate_argnums=(1,))
 _paged_step = jax.jit(decode_step, static_argnums=(1,), donate_argnums=(4,))
+_copy_pages = jax.jit(cache_lib.copy_pages, static_argnums=(0,),
+                      donate_argnums=(1,))
+_install_aux = jax.jit(cache_lib.install_rows_aux, static_argnums=(0,),
+                       donate_argnums=(1,))
 
 
 @dataclasses.dataclass
@@ -92,6 +105,19 @@ class _Queued:
     bypasses: int = 0          # times a younger request was admitted first
 
 
+@dataclasses.dataclass
+class _Prefill:
+    """A request in the PREFILLING state (DESIGN.md §6): it owns its row
+    slots (and, in the paged backend, the pages written so far through
+    slot[0]'s block table) and advances one prompt chunk per tick inside
+    the same scheduler tick as the active decode rows."""
+    item: _Queued
+    slots: List[int]
+    filled: int = 0            # prompt tokens written so far
+    cache1: object = None      # contiguous backend: prompt-sized side cache
+    aux: object = None         # paged backend: batch-1 per-row-family state
+
+
 class _SchedulerBase:
     """Queue + row-slot lifecycle + fused tick, independent of how KV
     storage is reserved. Subclasses implement the storage policy."""
@@ -100,7 +126,8 @@ class _SchedulerBase:
                  rows: int, max_seq: int, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory: Optional[Callable[[], strategies.DecodeStrategy]] = None,
-                 fused_sampling: bool = True):
+                 fused_sampling: bool = True,
+                 prefill_chunk: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.kcfg = kcfg
@@ -131,10 +158,20 @@ class _SchedulerBase:
                 "(cfg.moe_capacity_factor <= 0): capacity-limited dispatch "
                 "couples pool rows across requests")
 
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        # chunked admission needs a chunkable token stream; frontend /
+        # enc-dec requests keep the one-shot prefill path
+        self._chunked_ok = (prefill_chunk is not None
+                            and engine.chunkable(cfg, frontend))
         self.row_token = np.zeros((rows,), np.int32)
         self.row_pos = np.zeros((rows,), np.int32)
         self.free: List[int] = list(range(rows))
         self.queue: deque = deque()          # _Queued items
+        self.prefilling: Dict[int, _Prefill] = {}  # rid -> PREFILLING state
+        self._fused_rid: Optional[int] = None  # chunk riding this tick's
+        self._fused_chunk_out = None           # fused decode dispatch
         self.active: Dict[int, tuple] = {}   # rid -> (RequestState, slots)
         self._slots_dev: Dict[int, object] = {}  # rid -> device slot idx
         self._items: Dict[int, _Queued] = {}  # rid -> original submission
@@ -158,9 +195,18 @@ class _SchedulerBase:
         }
         # per-tick wall-time breakdown (seconds, cumulative over run)
         self.tick_time: Dict[str, float] = {
-            "model": 0.0, "sampler": 0.0, "controller": 0.0,
-            "sync": 0.0, "host": 0.0,
+            "model": 0.0, "prefill": 0.0, "sampler": 0.0,
+            "controller": 0.0, "sync": 0.0, "host": 0.0,
         }
+        # admission-side peak: bytes of the largest transient prefill
+        # structure (prompt-sized side cache / chunked aux state) — the
+        # regression knob for the old max_seq-sized throwaway cache
+        self.admit_peak_bytes = 0
+        # latency bookkeeping: submit walltime, time-to-first-token and
+        # per-tick token emission stamps (ITL = consecutive diffs)
+        self._submit_t: Dict[int, float] = {}
+        self.ttft: Dict[int, float] = {}
+        self.token_times: Dict[int, List[float]] = {}
 
     # ----------------------------------------------------- storage hooks
 
@@ -185,6 +231,40 @@ class _SchedulerBase:
 
     def _decode_tick(self):
         """One fused model step over the pool; returns pool logits."""
+        raise NotImplementedError
+
+    # ------------------------------------------ chunked-prefill hooks
+
+    def _has_local(self) -> bool:
+        return any(bt == "local" for bt in self.cfg.block_types())
+
+    def _ring_window(self) -> int:
+        """Pool rows' ring-cache window — the transient prefill cache
+        must match it so ring layouts line up at install time."""
+        return min(self.cfg.window_size, self.max_seq) \
+            if self._has_local() else 0
+
+    def _prefill_seq(self, item: _Queued) -> int:
+        """Sequence capacity of the transient admission prefill cache:
+        the prompt itself (not max_seq — the PR 5 sizing fix), floored
+        at the pool's ring window so ring layouts stay identical."""
+        return max(len(item.prompt) + self.n_prefix, self._ring_window(), 1)
+
+    def _begin_prefill(self, item: _Queued, slots: List[int]) -> _Prefill:
+        """Enter the PREFILLING state for an admitted request."""
+        raise NotImplementedError
+
+    def _prefill_step(self, pf: _Prefill) -> Optional[object]:
+        """Advance one prompt chunk. Returns the last-position logits
+        (V,) once the whole prompt is written, else None (also None if
+        the backend had to preempt ``pf`` itself to stay within its
+        page budget — the request is then back in the queue)."""
+        raise NotImplementedError
+
+    def _finish_prefill(self, pf: _Prefill) -> bool:
+        """Finalize storage for a fully prefilled request (install /
+        share pages across the fan-out). False iff the request had to be
+        preempted instead (paged pool dry)."""
         raise NotImplementedError
 
     # ------------------------------------------------------------ submit
@@ -218,6 +298,7 @@ class _SchedulerBase:
         item = _Queued(rid, np.asarray(prompt), rng, kcfg, need, fan_out,
                        strategy_factory)
         self._check_servable(item)
+        self._submit_t.setdefault(rid, time.perf_counter())
         self.queue.append(item)
         return rid
 
@@ -232,33 +313,101 @@ class _SchedulerBase:
         n = item.fan_out
         slots = sorted(self.free[:n])
         del self.free[:n]
+        self._items[item.rid] = item        # kept for preemption requeue
+        self._admit_seq[item.rid] = self._admit_counter
+        self._admit_counter += 1
 
+        if self._chunked_ok:
+            # PREFILLING state: the request owns its slots now and
+            # advances one chunk per tick; decode rows never wait
+            self.prefilling[item.rid] = self._begin_prefill(item, slots)
+            return True
+
+        # one-shot fallback: whole prompt in one dispatch, through a
+        # transient cache sized to the PROMPT (not max_seq)
         pf_logits, cache1 = engine._prefill_one(
-            self.params, self.cfg, item.prompt, self.max_seq, self.frontend)
+            self.params, self.cfg, item.prompt, self._prefill_seq(item),
+            self.frontend)
+        self.admit_peak_bytes = max(self.admit_peak_bytes,
+                                    cache_lib.cache_bytes(cache1))
+        # backends install the batch-1 prefill directly (the paged pool
+        # aliases shared prompt pages; the contiguous pool broadcasts in
+        # the scatter) — no N-row broadcast_batch tile on this path
+        self._install(slots, item, cache1)
+        self._start_request(item, slots, pf_logits)
+        return True
+
+    def _start_request(self, item: _Queued, slots: List[int],
+                       pf_logits) -> None:
+        """Shared admission tail: build the RequestState, sample the
+        fan-out's first tokens from the prefill logits, and either
+        activate the request or (already finished) emit its result.
+        Identical for one-shot and chunked admissions — the bitwise
+        equality of the final chunk's logits makes the two paths
+        token-for-token interchangeable."""
         rs = strategies.RequestState(
             item.factory(), self.params, self.cfg, item.kcfg,
             len(item.prompt), item.rng, eos_id=self.eos_id,
             bos_id=self.bos_id, max_seq=self.max_seq,
             n_prefix=self.n_prefix, frontend=self.frontend)
         self._maybe_pool_controller(rs, item)
-        # backends install the batch-1 prefill directly (the paged pool
-        # aliases shared prompt pages; the contiguous pool broadcasts in
-        # the scatter) — no N-row broadcast_batch tile on this path
-        self._install(slots, item, cache1)
         rs.first_tokens(pf_logits)
+        now = time.perf_counter()
+        self.ttft[item.rid] = now - self._submit_t[item.rid]
+        self.token_times[item.rid] = [now]
         if rs.finished:  # e.g. greedy whose first token is already EOS
             self.results[item.rid] = rs.result()
             rs.strategy.release_pool()
             self._release(slots)
+            self._items.pop(item.rid, None)
+            self._admit_seq.pop(item.rid, None)
         else:
             self.active[item.rid] = (rs, slots)
             self._slots_dev[item.rid] = jnp.asarray(slots)
-            self._items[item.rid] = item    # kept for preemption requeue
-            self._admit_seq[item.rid] = self._admit_counter
-            self._admit_counter += 1
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
-        return True
+
+    def _fuse_candidate(self) -> Optional[int]:
+        """rid of the PREFILLING request whose next chunk should ride
+        the tick's fused decode dispatch instead of its own (backends
+        that support it return the oldest; base: none)."""
+        return None
+
+    def _account_pages_tick(self) -> None:
+        """Page-usage accounting for ticks that skip the decode path
+        (prefill-only); the paged backend overrides."""
+
+    def _advance_one_prefill(self, rid: int) -> None:
+        """One standalone chunk for ``rid`` (absent = already preempted
+        by a sibling's page growth), with finalize + activation when it
+        was the prompt's last chunk."""
+        pf = self.prefilling.get(rid)
+        if pf is None:
+            return
+        logits = self._prefill_step(pf)
+        if logits is not None and rid in self.prefilling:
+            if self._finish_prefill(pf):
+                del self.prefilling[rid]
+                self._start_request(pf.item, pf.slots, logits)
+
+    def _advance_prefills(self) -> None:
+        """Advance every PREFILLING request by one chunk (admission
+        order). A request whose final chunk just ran is finalized and
+        activated in the same tick, so its rows join this tick's fused
+        decode step exactly like a one-shot admission would. The fuse
+        candidate (if any) is skipped here — its chunk runs inside the
+        decode dispatch and completes in ``_post_tick_prefill``."""
+        t0 = time.perf_counter()
+        self._fused_rid = self._fuse_candidate()
+        for rid in sorted(list(self.prefilling),
+                          key=lambda r: self._admit_seq[r]):
+            if rid != self._fused_rid:
+                self._advance_one_prefill(rid)
+        self.tick_time["prefill"] += time.perf_counter() - t0
+
+    def _post_tick_prefill(self) -> None:
+        """Finalize a fused chunk that completed its prompt this tick
+        (the activated request joins the NEXT decode tick)."""
 
     def _release(self, slots: List[int]) -> None:
         self._release_storage(slots)
@@ -315,14 +464,33 @@ class _SchedulerBase:
                              self.eos_id)
 
     def tick(self) -> None:
-        """Admit what fits, run one fused decode step over the pool, one
-        fused sampler dispatch over all active rows, one fused pooled
-        kappa-controller dispatch, ONE blocking device transfer carrying
-        tokens + controller outputs, then advance every active request
-        on its own rows (pure host work)."""
+        """Admit what fits, advance every PREFILLING request one chunk,
+        run one fused decode step over the pool, one fused sampler
+        dispatch over all active rows, one fused pooled kappa-controller
+        dispatch, ONE blocking device transfer carrying tokens +
+        controller outputs, then advance every active request on its own
+        rows (pure host work). Decode rows therefore never wait for a
+        whole admission prefill — at most one chunk of it runs inside
+        their tick."""
         while self._admit_one():
             pass
+        self._advance_prefills()
         if not self.active:
+            progressed = bool(self.prefilling)
+            if self._fused_rid is not None:
+                # the decode dispatch this chunk was to ride vanished
+                # (a sibling's page growth preempted the whole pool) —
+                # run the chunk standalone so the oldest prefill never
+                # loses its turn
+                rid, self._fused_rid = self._fused_rid, None
+                self._advance_one_prefill(rid)
+            if progressed:
+                # PREFILLING requests hold rows (and, paged, pages) —
+                # account them so utilization metrics stay honest over
+                # chunked-admission-heavy stretches
+                self._occupied_ticks += self.rows - len(self.free)
+                self._account_pages_tick()
+                self.ticks += 1
             return
         self._occupied_ticks += self.rows - len(self.free)
 
@@ -375,6 +543,7 @@ class _SchedulerBase:
             self.tick_time["sync"] += time.perf_counter() - t3
 
         t4 = time.perf_counter()
+        stamped = list(self.active)
         for rid in list(self.active):
             rs, slots = self.active[rid]
             if toks is None:
@@ -406,7 +575,13 @@ class _SchedulerBase:
                 self._admit_seq.pop(rid, None)
                 rs.strategy.release_pool()
                 self._release(slots)
-        self.tick_time["host"] += time.perf_counter() - t4
+        self._post_tick_prefill()
+        now = time.perf_counter()
+        for rid in stamped:
+            times = self.token_times.get(rid)
+            if times is not None:      # absent iff preempted mid-tick
+                times.append(now)
+        self.tick_time["host"] += now - t4
         self.ticks += 1
 
     # --------------------------------------------------------------- run
@@ -414,11 +589,16 @@ class _SchedulerBase:
     def run(self) -> Dict[int, GenResult]:
         """Drive queue + pool to completion; returns rid -> GenResult."""
         t0 = time.time()
-        while self.queue or self.active:
-            before = (len(self.queue), len(self.active))
+
+        def state():
+            return (len(self.queue), len(self.active), len(self.prefilling),
+                    sum(pf.filled for pf in self.prefilling.values()))
+
+        while self.queue or self.active or self.prefilling:
+            before = state()
             self.tick()
-            if not self.active and self.queue and \
-                    (len(self.queue), len(self.active)) == before:
+            if not self.active and not self.prefilling and self.queue \
+                    and state() == before:
                 raise RuntimeError(
                     "scheduler stalled: queued request cannot be admitted "
                     f"(free={len(self.free)} rows)")
@@ -457,7 +637,25 @@ class _SchedulerBase:
         for k, v in self.tick_time.items():
             out[f"time_{k}_s"] = v
         out.update(self.counters)
+        out["admit_peak_bytes"] = self.admit_peak_bytes
+        out.update(self.latency_stats())
         return out
+
+    def latency_stats(self) -> Dict[str, float]:
+        """TTFT / inter-token-latency percentiles over every request
+        served so far (per-request stamps stay in ``token_times`` for
+        finer-grained windows — the interleaving benchmark reads them
+        directly)."""
+        ttft = np.asarray(sorted(self.ttft.values()) or [0.0])
+        itl = np.asarray([d for ts in self.token_times.values()
+                          for d in np.diff(ts)] or [0.0])
+        return {
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "itl_p50_s": float(np.percentile(itl, 50)),
+            "itl_p99_s": float(np.percentile(itl, 99)),
+            "itl_max_s": float(itl.max()),
+        }
 
 
 class ContinuousBatchingScheduler(_SchedulerBase):
@@ -481,11 +679,13 @@ class ContinuousBatchingScheduler(_SchedulerBase):
     def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
                  rows: int, max_seq: int, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
-                 strategy_factory=None, fused_sampling: bool = True):
+                 strategy_factory=None, fused_sampling: bool = True,
+                 prefill_chunk: Optional[int] = None):
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,
-                         fused_sampling=fused_sampling)
+                         fused_sampling=fused_sampling,
+                         prefill_chunk=prefill_chunk)
         self.pool = init_cache(cfg, rows, max_seq)
 
     def _admissible(self, item: _Queued) -> bool:
@@ -499,8 +699,33 @@ class ContinuousBatchingScheduler(_SchedulerBase):
 
     def _install(self, slots, item, sub1) -> None:
         # the batch-1 prefill broadcasts across the n slots inside the
-        # scatter itself — no separate N-row tile materialized
+        # scatter itself (prefix-extent: the sub-cache is prompt-sized,
+        # row tails past the prompt are never read) — no separate N-row
+        # tile materialized
         self.pool = _scatter(self.pool, jnp.asarray(slots), sub1)
+
+    # ------------------------------------------------- chunked prefill
+
+    def _begin_prefill(self, item, slots) -> _Prefill:
+        cache1 = init_cache(self.cfg, 1, self._prefill_seq(item))
+        self.admit_peak_bytes = max(self.admit_peak_bytes,
+                                    cache_lib.cache_bytes(cache1))
+        return _Prefill(item=item, slots=slots, cache1=cache1)
+
+    def _prefill_step(self, pf: _Prefill):
+        plen = len(pf.item.prompt)
+        c = min(self.prefill_chunk, plen - pf.filled)
+        piece = np.asarray(pf.item.prompt[pf.filled:pf.filled + c])
+        logits, pf.cache1, _ = engine._prefill_chunk_contig(
+            self.params, self.cfg, jnp.asarray(piece)[None],
+            jnp.full((1,), pf.filled, jnp.int32), pf.filled, pf.cache1)
+        pf.filled += c
+        return logits[0] if pf.filled >= plen else None
+
+    def _finish_prefill(self, pf: _Prefill) -> bool:
+        self._install(pf.slots, pf.item, pf.cache1)
+        pf.cache1 = None
+        return True
 
     def _decode_tick(self):
         logits, self.pool = engine._model_step(
@@ -553,12 +778,13 @@ class PagedScheduler(_SchedulerBase):
                  num_pages: Optional[int] = None, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory=None, fused_sampling: bool = True,
-                 max_bypass: int = 4):
+                 max_bypass: int = 4, prefill_chunk: Optional[int] = None):
         max_seq = -(-max_seq // page_size) * page_size
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,
-                         fused_sampling=fused_sampling)
+                         fused_sampling=fused_sampling,
+                         prefill_chunk=prefill_chunk)
         self.page_size = page_size
         self.max_pages = max_seq // page_size
         self.num_pages = num_pages if num_pages is not None \
@@ -684,19 +910,31 @@ class PagedScheduler(_SchedulerBase):
 
     # ------------------------------------------- lazy growth / preemption
 
-    def _youngest_active(self) -> int:
-        return max(self.active, key=lambda r: self._admit_seq[r])
+    def _youngest_started(self) -> int:
+        """Youngest-admitted request holding pool resources — decoding
+        OR still PREFILLING (a half-written prefill is the cheapest
+        thing to evict: no decoded tokens are thrown away)."""
+        cands = list(self.active) + list(self.prefilling)
+        return max(cands, key=lambda r: self._admit_seq[r])
 
     def _preempt(self, rid: int) -> None:
-        """Evict ``rid``: free its pages and rows, return its original
-        submission to the queue head. On re-admission it replays prefill
-        and decode from its original RNG stream, so the final tokens are
-        identical to a never-preempted run."""
-        rs, slots = self.active.pop(rid)
-        self._slots_dev.pop(rid, None)
+        """Evict ``rid`` (active or mid-PREFILLING): free its pages and
+        rows, return its original submission to the queue head. On
+        re-admission it replays prefill and decode from its original RNG
+        stream, so the final tokens are identical to a never-preempted
+        run."""
+        if rid in self.prefilling:
+            pf = self.prefilling.pop(rid)
+            self._release(pf.slots)
+        else:
+            rs, slots = self.active.pop(rid)
+            self._slots_dev.pop(rid, None)
+            rs.strategy.release_pool()
+            self._release(slots)
         self._admit_seq.pop(rid, None)
-        rs.strategy.release_pool()
-        self._release(slots)
+        # latency stamps restart with the replay
+        self.ttft.pop(rid, None)
+        self.token_times.pop(rid, None)
         self.queue.appendleft(self._items.pop(rid))
         self.counters["preemptions"] += 1
 
@@ -719,7 +957,7 @@ class PagedScheduler(_SchedulerBase):
                         self.alloc.append_page(s)
                         self._bt_dev = None
                         continue
-                    victim = self._youngest_active()
+                    victim = self._youngest_started()
                     self._preempt(victim)
                     if victim == rid:
                         evicted = True
@@ -727,7 +965,145 @@ class PagedScheduler(_SchedulerBase):
                 if evicted:
                     break
 
+    # ------------------------------------------------- chunked prefill
+    #
+    # Chunk K/V goes STRAIGHT into allocator-owned pages through
+    # slot[0]'s block table — no batch-1 side cache for the global
+    # layers, no install scatter for the prompt phase. Only the O(window)
+    # / O(1) per-row families (ring / recurrent / rwkv6) ride a tiny
+    # batch-1 aux cache, installed per-branch at completion (they cannot
+    # be shared copy-on-write anyway). Pages are acquired lazily chunk by
+    # chunk; the heap running dry preempts the youngest-started request,
+    # possibly this prefill itself.
+
+    def _prefill_seq(self, item: _Queued) -> int:
+        # the one-shot fallback's install scatter reshapes the transient
+        # cache into whole pages
+        s = super()._prefill_seq(item)
+        return -(-s // self.page_size) * self.page_size
+
+    def _begin_prefill(self, item, slots) -> _Prefill:
+        aux = init_cache(self.cfg, 1, max(self._ring_window(), 1))
+        self.admit_peak_bytes = max(self.admit_peak_bytes,
+                                    cache_lib.cache_bytes(aux))
+        return _Prefill(item=item, slots=slots, aux=aux)
+
+    # compile-count bound for long prompts: the chunk's block-table
+    # prefix width is bucketed to a page multiple, so a P-page prompt
+    # compiles ~P/_BT_BUCKET chunk shapes instead of one per chunk.
+    # Padding entries alias the trash page; their view positions trail
+    # every chunk query, so the bitwise-equality argument is unchanged.
+    _BT_BUCKET = 8
+
+    def _grow_for_chunk(self, pf: _Prefill) -> Optional[int]:
+        """Acquire the pages covering the next chunk (preempting the
+        youngest-started request when the heap is dry). Returns the
+        chunk length, or None if ``pf`` itself had to be evicted."""
+        item, s0 = pf.item, pf.slots[0]
+        c = min(self.prefill_chunk, len(item.prompt) - pf.filled)
+        need = self.alloc.pages_for(pf.filled + c)
+        while int(self.alloc.owned[s0]) < need:
+            if self.alloc.can_alloc(1):
+                if int(self.alloc.owned[s0]) == 0:
+                    self.alloc.set_row_pages(s0, self.alloc.alloc_pages(1))
+                else:
+                    self.alloc.append_page(s0)
+                self._bt_dev = None
+                continue
+            victim = self._youngest_started()
+            self._preempt(victim)
+            if victim == item.rid:
+                return None          # self-evicted; replay from the queue
+        return c
+
+    def _chunk_args(self, pf: _Prefill, c: int):
+        """Device operands for one chunk: tokens, per-row pos0, the
+        bucketed PREFIX of slot[0]'s block table (attention cost scales
+        with the filled prompt, not max_seq), and the physical page of
+        every chunk token."""
+        item, s0 = pf.item, pf.slots[0]
+        piece = np.asarray(item.prompt[pf.filled:pf.filled + c])
+        qpos = np.arange(pf.filled, pf.filled + c)
+        cpages = self.alloc.block[s0][qpos // self.page_size]
+        need = self.alloc.pages_for(pf.filled + c)
+        width = min(self.max_pages,
+                    -(-need // self._BT_BUCKET) * self._BT_BUCKET)
+        return (jnp.asarray(piece)[None],
+                jnp.full((1,), pf.filled, jnp.int32),
+                jnp.asarray(self.alloc.block[s0:s0 + 1, :width]),
+                jnp.asarray(cpages.astype(np.int32))[None])
+
+    def _prefill_step(self, pf: _Prefill):
+        """Standalone chunk dispatch — used when no decode tick runs
+        this tick (empty pool) or for PREFILLING requests beyond the
+        fused candidate."""
+        c = self._grow_for_chunk(pf)
+        if c is None:
+            return None
+        toks, pos0, bt, cpages = self._chunk_args(pf, c)
+        logits, self.pool, pf.aux = engine._prefill_chunk_paged(
+            self.params, self.cfg, toks, pos0, 0, self.pool, bt, cpages,
+            pf.aux)
+        pf.filled += c
+        return logits[0] if pf.filled >= len(pf.item.prompt) else None
+
+    def _finish_prefill(self, pf: _Prefill) -> bool:
+        """Share the fully-written prompt pages across the fan-out:
+        slot[0] keeps its table (it wrote the pages), siblings alias the
+        full prompt pages read-only and get a private device copy of the
+        mid-page boundary (their COW write target); the per-row aux
+        state broadcasts into every branch row. Decode pages then grow
+        lazily exactly as for one-shot admissions."""
+        item, s0 = pf.item, pf.slots[0]
+        n = item.fan_out
+        pos0 = self._prompt_pos(item)
+        full = pos0 // self.page_size
+        boundary = 1 if (n > 1 and pos0 % self.page_size) else 0
+        if n > 1:
+            need = boundary * (n - 1)
+            while not self.alloc.can_alloc(need):
+                victim = self._youngest_started()
+                self._preempt(victim)
+                if victim == item.rid:
+                    return False
+            shared = [int(p) for p in self.alloc.block[s0, :full]]
+            copies: List[int] = []
+            if boundary:
+                b_src = int(self.alloc.block[s0, full])
+                copies = self.alloc.alloc_pages(need)
+                self.pool = _copy_pages(
+                    self.cfg, self.pool,
+                    jnp.asarray(np.full((need,), b_src, np.int32)),
+                    jnp.asarray(np.asarray(copies, np.int32)))
+            for i, s in enumerate(pf.slots[1:]):
+                self.alloc.set_row_pages(
+                    s, shared + ([copies[i]] if boundary else []))
+        self.pool = _install_aux(self.cfg, self.pool,
+                                 jnp.asarray(pf.slots), pf.aux)
+        pf.aux = None
+        self._bt_dev = None
+        return True
+
+    def _fuse_candidate(self) -> Optional[int]:
+        # the OLDEST prefilling request rides the decode dispatch: one
+        # tick = one fused device program = decode + one prompt chunk
+        # (younger concurrent prefills dispatch standalone)
+        if not self.active or not self.prefilling:
+            return None
+        return min(self.prefilling, key=lambda r: self._admit_seq[r])
+
+    def _account_pages_tick(self) -> None:
+        self._page_ticks += self.alloc.used_count
+        self._page_peak = max(self._page_peak, self.alloc.used_count)
+
     def _decode_tick(self):
+        # grow the fused chunk's pages FIRST — growth can preempt, which
+        # must settle before write pages are certified below
+        fused_c = None
+        pf = self.prefilling.get(self._fused_rid) \
+            if self._fused_rid is not None else None
+        if pf is not None:
+            fused_c = self._grow_for_chunk(pf)
         self._ensure_pages()
         # COW guard: every active row's write page must be refcount-1
         # (allocator truth); the certified pages are pinned into the
@@ -737,15 +1113,40 @@ class PagedScheduler(_SchedulerBase):
                         for s in slots], np.int64)
         if occ.size:
             wp[occ] = self.alloc.write_page(occ, self.row_pos[occ])
-        self._page_ticks += self.alloc.used_count
-        self._page_peak = max(self._page_peak, self.alloc.used_count)
+        self._account_pages_tick()
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self.alloc.block)
+        if fused_c is not None and self._fused_rid in self.prefilling:
+            toks, pos0, bt, cpages = self._chunk_args(pf, fused_c)
+            logits, clogits, self.pool, pf.aux = engine._fused_decode_chunk(
+                self.params, self.cfg, jnp.asarray(self.row_token),
+                jnp.asarray(self.row_pos), self.pool, self._bt_dev,
+                jnp.asarray(wp), toks, pos0, bt, cpages, pf.aux)
+            pf.filled += fused_c
+            self._fused_chunk_out = clogits
+            return logits
+        self._fused_rid = None
         logits, self.pool = _paged_step(
             self.params, self.cfg, jnp.asarray(self.row_token),
             jnp.asarray(self.row_pos), self.pool, self._bt_dev,
             jnp.asarray(wp))
         return logits
+
+    def _post_tick_prefill(self) -> None:
+        rid = self._fused_rid
+        self._fused_rid = None
+        if rid is None or rid not in self.prefilling:
+            return
+        pf = self.prefilling[rid]
+        if pf.filled < len(pf.item.prompt):
+            return
+        if self._finish_prefill(pf):
+            del self.prefilling[rid]
+            # rows join the NEXT decode tick (the chunk's logits only
+            # materialized with this tick's compute)
+            self._start_request(pf.item, pf.slots,
+                                self._fused_chunk_out[0])
+        self._fused_chunk_out = None
 
     # ----------------------------------------------------------- metrics
 

@@ -1,0 +1,75 @@
+"""Shared PageAllocator test harness (no test deps beyond numpy):
+the global invariant checker and the alloc/share/COW-diverge/free
+op-stream interpreter. Driven by the hypothesis property test in
+``test_property.py``, the seeded tier-1 twin in ``test_paged.py`` and
+the fuzz-equivalence leak checks — one interpreter, so an invariant
+added here is enforced everywhere at once."""
+import numpy as np
+
+from repro.serving import cache as cache_lib
+
+
+def check_invariants(alloc: "cache_lib.PageAllocator") -> None:
+    """Refcounts match block-table references exactly, every referenced
+    page has ref >= 1, a page sits in two tables only while ref > 1,
+    owned prefixes hold real pages with all-trash tails, and free-heap +
+    referenced partition the pool (no leak, no double free)."""
+    refs = np.zeros((alloc.num_pages,), np.int64)
+    for r in range(alloc.rows):
+        n = int(alloc.owned[r])
+        assert np.all(alloc.block[r, :n] < alloc.num_pages)
+        assert np.all(alloc.block[r, n:] == alloc.trash)
+        for p in alloc.block[r, :n]:
+            refs[int(p)] += 1
+    assert np.array_equal(refs, alloc.ref), "refcount drift"
+    free = set(alloc.free_pages)
+    assert len(free) == len(alloc.free_pages), "duplicate free page"
+    assert all(refs[p] == 0 for p in free), "freed page still referenced"
+    assert all(refs[p] > 0 for p in range(alloc.num_pages)
+               if p not in free), "leaked page (zero refs, not free)"
+    # shared pages (in >1 table) must carry ref > 1 — COW soundness
+    counts: dict = {}
+    for r in range(alloc.rows):
+        for p in alloc.block[r, :int(alloc.owned[r])]:
+            counts[int(p)] = counts.get(int(p), 0) + 1
+    for p, c in counts.items():
+        if c > 1:
+            assert alloc.ref[p] == c > 1
+
+
+def run_allocator_ops(num_pages, page_size, rows, max_pages, ops):
+    """Interpret a random op stream against a PageAllocator, checking
+    the invariants after every step. Ops are (kind, a, b) with the
+    operands reduced mod the current candidates, so any integer triple
+    is a valid program — which is what makes a failing case
+    shrinkable."""
+    alloc = cache_lib.PageAllocator(num_pages, page_size, rows, max_pages)
+    owners = []                              # rows with any pages
+    for kind, a, b in ops:
+        free_rows = [r for r in range(rows) if not alloc.owned[r]]
+        if kind == "alloc" and free_rows:
+            r = free_rows[a % len(free_rows)]
+            n = 1 + b % max_pages
+            if alloc.can_alloc(n):
+                alloc.alloc_row(r, n)
+                owners.append(r)
+        elif kind == "share" and owners and free_rows:
+            # alias one owner's pages into a free row (prefix sharing)
+            src = owners[a % len(owners)]
+            dst = free_rows[b % len(free_rows)]
+            pages = [int(p) for p in alloc.row_pages(src)]
+            alloc.set_row_pages(dst, pages)
+            owners.append(dst)
+        elif kind == "diverge" and owners:
+            # COW divergence: grow a private decode page
+            r = owners[a % len(owners)]
+            if int(alloc.owned[r]) < max_pages and alloc.can_alloc(1):
+                alloc.append_page(r)
+        elif kind == "free" and owners:
+            r = owners.pop(a % len(owners))
+            alloc.free_row(r)
+        check_invariants(alloc)
+    for r in list(owners):
+        alloc.free_row(r)
+    check_invariants(alloc)
+    assert alloc.free_count == alloc.num_pages, "quiescent leak"

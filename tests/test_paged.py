@@ -18,26 +18,10 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 
 # ---------------------------------------------------------- allocator
 
-def _check_invariants(alloc: PageAllocator):
-    """Refcounts, free heap and block tables partition the physical
-    pages: every page's refcount equals the number of block-table
-    entries naming it, zero-ref pages are exactly the free ones (no
-    leak, no double-free)."""
-    refs = np.zeros((alloc.num_pages,), np.int64)
-    for r in range(alloc.rows):
-        n = int(alloc.owned[r])
-        row_pages = alloc.block[r]
-        # owned prefix holds real pages, tail is all trash
-        assert np.all(row_pages[:n] < alloc.num_pages)
-        assert np.all(row_pages[n:] == alloc.trash)
-        for p in row_pages[:n]:
-            refs[int(p)] += 1
-    assert np.array_equal(refs, alloc.ref), "refcount drift"
-    free = set(alloc.free_pages)
-    assert len(free) == len(alloc.free_pages), "duplicate free page"
-    assert all(refs[p] == 0 for p in free), "freed page still referenced"
-    assert all(refs[p] > 0 for p in range(alloc.num_pages)
-               if p not in free), "leaked page (zero refs, not free)"
+# one source of truth for the allocator's global invariant set —
+# shared with the hypothesis op-stream property test (test_property.py)
+# and the fuzz-equivalence leak checks
+from allocator_harness import check_invariants as _check_invariants  # noqa: E402
 
 
 def test_allocator_alloc_free_reuse():
@@ -133,6 +117,23 @@ def test_allocator_cow_share_diverge_free():
     alloc.free_row(3)                           # last reference frees them
     _check_invariants(alloc)
     assert alloc.free_count == alloc.num_pages
+
+
+def test_allocator_seeded_interleaving_invariants():
+    """Seeded alloc / share / COW-diverge / free interleavings through
+    the shared op-stream interpreter (allocator_harness) — the tier-1
+    twin of the hypothesis property test in test_property.py, which
+    needs the optional dependency: invariants hold after every op, zero
+    pages leaked at quiescence."""
+    from allocator_harness import run_allocator_ops
+    rng = np.random.RandomState(42)
+    kinds = ["alloc", "share", "diverge", "free"]
+    for trial in range(6):
+        num_pages = int(rng.randint(6, 24))
+        max_pages = int(rng.randint(2, 6))
+        ops = [(kinds[int(rng.randint(4))], int(rng.randint(10 ** 6)),
+                int(rng.randint(10 ** 6))) for _ in range(120)]
+        run_allocator_ops(num_pages, 4, 8, max_pages, ops)
 
 
 def test_allocator_alloc_order_deterministic():

@@ -131,6 +131,30 @@ def test_bucket_chain_properties(n):
         assert b in chain
 
 
+# -------------------------------------------------- PageAllocator (COW)
+#
+# The invariant checker and the alloc/share/COW-diverge/free op-stream
+# interpreter live in tests/allocator_harness.py, shared with the
+# seeded tier-1 twin in test_paged.py (this module skips entirely when
+# hypothesis is absent).
+
+from allocator_harness import run_allocator_ops  # noqa: E402
+
+
+@given(num_pages=st.integers(4, 24), page_size=st.sampled_from([4, 8]),
+       rows=st.integers(2, 8), max_pages=st.integers(1, 6),
+       ops=st.lists(st.tuples(
+           st.sampled_from(["alloc", "share", "diverge", "free"]),
+           st.integers(0, 10 ** 6), st.integers(0, 10 ** 6)),
+           max_size=60))
+@settings(**SETTINGS)
+def test_page_allocator_interleaving_invariants(num_pages, page_size, rows,
+                                                max_pages, ops):
+    """Random interleavings of alloc / share / COW-diverge / free keep
+    every allocator invariant and leak nothing at quiescence."""
+    run_allocator_ops(num_pages, page_size, rows, max_pages, ops)
+
+
 # ----------------------------------------------------------------- data
 
 @given(seed=st.integers(0, 2000), num_ops=st.integers(1, 3),
