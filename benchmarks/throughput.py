@@ -36,6 +36,13 @@ lazy decode-page allocation and youngest-admitted preemption serve the
 whole queue; shared-page savings, peak pages and preemption counts are
 emitted, and zero leaked pages is asserted after every paged run.
 
+Part 5 (PR 6 acceptance): a queue of requests sharing one long preamble
+(the shared-system-prompt regime) served with the radix prefix cache on
+vs off. Later admissions alias the earlier requests' published prompt
+pages and skip that part of prefill entirely; the scenario reports the
+hit rate and the fraction of queue-wide prefill tokens saved (>= 50%
+target) and asserts the cached run is token-for-token identical.
+
 Each scheduler run also reports a per-tick wall-time breakdown (model
 step / sampler dispatch / pooled-controller dispatch / blocking sync /
 per-request host work) so controller-overhead regressions are visible:
@@ -136,8 +143,13 @@ def _run_scheduled(cfg, params, kcfg, method, prompts, max_seq, rows, *,
     tp = sched.throughput()
     if paged:
         # COW/refcount hygiene: every page reference dropped, none leaked
+        # (the radix tree's pins are dropped first — tp already captured
+        # the live pinned-page count)
+        if getattr(sched, "pcache", None) is not None:
+            sched.pcache.drop()
         assert sched.alloc.free_count == sched.num_pages, \
             f"leaked {sched.num_pages - sched.alloc.free_count} pages"
+        assert int(sched.alloc.pinned.sum()) == 0
     return [res[r] for r in rids], tp
 
 
@@ -194,6 +206,74 @@ def _fanout_scenario(cfg, params):
         "tokens_per_s": tp["tokens_per_s"],
         "page_utilization": tp["page_utilization"],
         "ticks": tp["ticks"], "time_s": tp["time_s"],
+    }]
+
+
+PREFIX_DEPTH = 8                # requests sharing the preamble
+PREFIX_PREAMBLE = 320           # shared-preamble target length (tokens):
+                                # 20 full pages every later request aliases
+PREFIX_CHUNK = 32               # chunked prefill (required for resuming
+                                # at the cached extent)
+
+
+def _prefix_scenario(cfg, params):
+    """Part 5 (PR 6 acceptance): PREFIX_DEPTH requests share one long
+    preamble and differ only in a short tail. With the radix prefix
+    cache on, every admission after the first completions aliases the
+    published preamble pages and prefills only its tail; with it off,
+    every request re-prefills the whole preamble. Both runs must be
+    token-for-token identical (the cache is a pure prefill shortcut)."""
+    kcfg = _kcfg()
+    base = _prompts(PREFIX_DEPTH + 40)
+    pieces = [base[PREFIX_DEPTH][:-1]]       # BOS + body, no QM
+    total, i = len(pieces[0]), PREFIX_DEPTH + 1
+    while total < PREFIX_PREAMBLE:
+        pieces.append(base[i][1:-1])         # strip BOS/QM, keep body
+        total += len(base[i]) - 2
+        i += 1
+    preamble = np.concatenate(pieces)
+    prompts = [np.concatenate([preamble, base[j][1:]])
+               for j in range(PREFIX_DEPTH)]
+    max_seq = max(len(p) for p in prompts) + kcfg.max_new_tokens
+    max_seq = -(-max_seq // PAGE_SIZE) * PAGE_SIZE
+    # one fan-out of rows: requests drain the queue one at a time, so
+    # every request after the first finds the preamble already published
+    # (concurrent-admission hit/miss races are exercised in the fuzz
+    # equivalence suite; this scenario measures steady-state reuse)
+    rows = kcfg.num_branches
+    num_pages = 2 * rows * max_seq // PAGE_SIZE
+
+    def run_once(pc):
+        gens, tp = _run_scheduled(
+            cfg, params, kcfg, "kappa", prompts, max_seq, rows,
+            paged=True, page_size=PAGE_SIZE, num_pages=num_pages,
+            prefill_chunk=PREFIX_CHUNK, prefix_cache=pc)
+        return gens, tp
+
+    run_once(True)                           # warm the chunked shapes
+    run_once(False)
+    gens_off, tp_off = run_once(False)
+    gens_on, tp_on = run_once(True)
+    assert all(a.tokens == b.tokens for a, b in zip(gens_off, gens_on)), \
+        "prefix-cached serving diverged from the uncached run"
+    prompt_tokens = sum(len(p) for p in prompts)
+    looked = tp_on["prefix_hits"] + tp_on["prefix_misses"]
+    return [{
+        "kind": "prefix", "method": "kappa", "depth": PREFIX_DEPTH,
+        "preamble_len": int(len(preamble)), "page_size": PAGE_SIZE,
+        "prefill_chunk": PREFIX_CHUNK, "prompt_tokens": prompt_tokens,
+        "prefix_hits": tp_on["prefix_hits"],
+        "prefix_hit_rate": tp_on["prefix_hits"] / max(looked, 1),
+        "prefix_tokens_saved": tp_on["prefix_tokens_saved"],
+        "prefill_tokens_saved_frac": tp_on["prefix_tokens_saved"]
+        / max(prompt_tokens, 1),
+        "prefix_evictions": tp_on["prefix_evictions"],
+        "prefix_pinned_pages": tp_on["prefix_pinned_pages"],
+        "cached_tokens_per_s": tp_on["tokens_per_s"],
+        "uncached_tokens_per_s": tp_off["tokens_per_s"],
+        "cached_vs_uncached": tp_on["tokens_per_s"]
+        / max(tp_off["tokens_per_s"], 1e-9),
+        "ticks": tp_on["ticks"], "time_s": tp_on["time_s"],
     }]
 
 
@@ -466,6 +546,7 @@ def run(cfg, params):
             })
     out.extend(_fanout_scenario(cfg, params))
     out.extend(_interleave_scenario(cfg, params))
+    out.extend(_prefix_scenario(cfg, params))
     return out
 
 
@@ -487,6 +568,15 @@ def emit_csv(rows):
                        f"chunked_itl_p99_us={r['chunked_itl_p99_s'] * 1e6:.0f};"
                        f"chunked_ratio={r['chunked_vs_baseline_itl_p99']:.2f};"
                        f"ttft_long_s={r['chunked_ttft_long_s']:.3f}")
+        elif r["kind"] == "prefix":
+            name = f"throughput/prefix_depth{r['depth']}"
+            us = r["time_s"] * 1e6 / max(r["ticks"], 1)
+            derived = (f"hit_rate={r['prefix_hit_rate']:.2f};"
+                       f"saved_frac={r['prefill_tokens_saved_frac']:.2f};"
+                       f"saved_toks={r['prefix_tokens_saved']};"
+                       f"cached_tok_s={r['cached_tokens_per_s']:.1f};"
+                       f"uncached_tok_s={r['uncached_tokens_per_s']:.1f};"
+                       f"evictions={r['prefix_evictions']}")
         elif r["kind"] == "fanout":
             name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
             us = r["time_s"] * 1e6 / max(r["ticks"], 1)
@@ -568,6 +658,17 @@ if __name__ == "__main__":
                   f"{r['oneshot_vs_baseline_itl_p99']:.2f}x); long TTFT "
                   f"{r['chunked_ttft_long_s']:.3f}s chunked vs "
                   f"{r['oneshot_ttft_long_s']:.3f}s one-shot -> {verdict}")
+    for r in rows:
+        if r["kind"] == "prefix":
+            verdict = "PASS" if (r["prefill_tokens_saved_frac"] >= 0.5
+                                 and r["prefix_hit_rate"] > 0) else "FAIL"
+            print(f"# prefix: {r['depth']} requests sharing a "
+                  f"{r['preamble_len']}-token preamble — hit rate "
+                  f"{r['prefix_hit_rate']:.2f}, "
+                  f"{r['prefix_tokens_saved']}/{r['prompt_tokens']} prefill "
+                  f"tokens saved ({r['prefill_tokens_saved_frac']:.0%}, "
+                  f">=50% target), cached serving "
+                  f"{r['cached_vs_uncached']:.2f}x uncached -> {verdict}")
     for r in rows:
         if r["kind"] == "fanout":
             print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "

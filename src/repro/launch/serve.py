@@ -53,7 +53,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                scheduler: bool = False, sched_rows: int | None = None,
                paged: bool = False, page_size: int = 64,
                num_pages: int | None = None,
-               prefill_chunk: int | None = None) -> dict:
+               prefill_chunk: int | None = None,
+               prefix_cache: bool = False) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -84,7 +85,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                         prefill_chunk=prefill_chunk)
         if paged:
             sched = PagedScheduler(params, cfg, kcfg, page_size=page_size,
-                                   num_pages=num_pages, **sched_kw)
+                                   num_pages=num_pages,
+                                   prefix_cache=prefix_cache, **sched_kw)
         else:
             sched = ContinuousBatchingScheduler(params, cfg, kcfg, **sched_kw)
         rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i))
@@ -132,6 +134,11 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
             out["page_utilization"] = tp["page_utilization"]
             out["page_peak"] = tp["page_peak"]
             out["preemptions"] = tp["preemptions"]
+            if prefix_cache:
+                out["prefix_hit_rate"] = tp["prefix_hit_rate"]
+                out["prefix_tokens_saved"] = tp["prefix_tokens_saved"]
+                out["prefix_evictions"] = tp["prefix_evictions"]
+                out["prefix_pinned_pages"] = tp["prefix_pinned_pages"]
     if verbose:
         line = (f"{arch} {method:7s} N={n:3d} acc={out['accuracy']:.3f} "
                 f"total_toks={out['total_tokens']:8.1f} "
@@ -140,6 +147,11 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
             line += (f" | sched: {out['tokens_per_s']:.1f} tok/s "
                      f"{out['requests_per_s']:.2f} req/s "
                      f"util={out['row_utilization']:.2f}")
+        if paged and prefix_cache:
+            line += (f" | prefix: hit={out['prefix_hit_rate']:.2f} "
+                     f"saved={out['prefix_tokens_saved']} "
+                     f"evict={out['prefix_evictions']} "
+                     f"pinned={out['prefix_pinned_pages']}")
         print(line)
     return out
 
@@ -163,6 +175,11 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="allocatable KV pages for --paged (default: no "
                          "page pressure, rows*max_seq/page_size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the cross-request radix prefix cache "
+                         "(--paged only): admissions alias previously "
+                         "published prompt/winner pages and skip their "
+                         "prefill")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill size: admissions advance this "
                          "many prompt tokens per tick interleaved with "
@@ -173,7 +190,8 @@ def main(argv=None):
                ckpt=args.ckpt, max_new=args.max_new,
                scheduler=args.scheduler or args.paged, sched_rows=args.rows,
                paged=args.paged, page_size=args.page_size,
-               num_pages=args.num_pages, prefill_chunk=args.prefill_chunk)
+               num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
+               prefix_cache=args.prefix_cache)
 
 
 if __name__ == "__main__":

@@ -682,8 +682,16 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, pos0, hist_len: int,
     (B, C)) and attend through ``block_tables`` (B, MP); the per-row
     families (ring / recurrent / rwkv6) thread their state through the
     batch-1 ``aux`` cache, installed into the row slots when prefill
-    completes. Encoder-decoder and frontend-prefixed models are not
-    supported (callers fall back to one-shot prefill).
+    completes. Because attention validity is purely positional
+    (kv_pos <= q_pos through the block table), the FIRST chunk may start
+    at a nonzero ``pos0``: the radix prefix cache (DESIGN.md §7) aliases
+    already-written pages into the block table and resumes prefill at
+    the cached extent — the earlier pages are attended, never recomputed.
+    For all-'global' patterns this is bitwise-equal to prefilling from
+    token 0; per-row aux families cannot be resumed this way, which is
+    why the prefix cache requires an all-global pattern. Encoder-decoder
+    and frontend-prefixed models are not supported (callers fall back to
+    one-shot prefill).
 
     Returns (last-position logits (B, V), new_cache, new_aux)."""
     if cfg.is_encoder_decoder:

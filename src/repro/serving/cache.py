@@ -191,6 +191,10 @@ class PageAllocator:
         self.block = np.full((rows, max_pages), self.trash, np.int32)
         self.owned = np.zeros((rows,), np.int32)   # block-table entries/row
         self.ref = np.zeros((num_pages,), np.int32)
+        # pin references held by the radix prefix cache (a pin is an
+        # ordinary ``ref`` plus this attribution mark, so the invariant
+        # checkers can split refcounts into table refs + pins)
+        self.pinned = np.zeros((num_pages,), np.int32)
 
     # ------------------------------------------------------------ queries
 
@@ -273,6 +277,34 @@ class PageAllocator:
         self.block[row] = self.trash
         self.owned[row] = 0
 
+    # -------------------------------------------------------- pinned pages
+
+    def pin_page(self, page: int) -> None:
+        """Take a pin reference on ``page`` (the radix prefix cache's
+        claim): the page survives every block table dropping it and
+        returns to the free heap only after :meth:`unpin_page`. Pinning
+        requires the page to be live (referenced) — a pin adopts an
+        existing page, it never resurrects a freed one."""
+        page = int(page)
+        if not (0 <= page < self.num_pages):
+            raise ValueError(f"cannot pin page {page}")
+        if self.ref[page] == 0:
+            raise ValueError(f"cannot pin unreferenced page {page}")
+        self.ref[page] += 1
+        self.pinned[page] += 1
+
+    def unpin_page(self, page: int) -> None:
+        """Drop a pin reference; the page goes back on the free heap
+        when that was its last reference (O(log F), like
+        :meth:`free_row`)."""
+        page = int(page)
+        if self.pinned[page] < 1:
+            raise ValueError(f"page {page} is not pinned")
+        self.pinned[page] -= 1
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            heapq.heappush(self.free_pages, page)
+
     # --------------------------------------------------------- COW guard
 
     def write_page(self, rows: np.ndarray, pos: np.ndarray) -> np.ndarray:
@@ -296,6 +328,171 @@ class PageAllocator:
                 f"to shared pages {phys[shared].tolist()} "
                 f"(refcounts {self.ref[phys][shared].tolist()})")
         return phys.astype(np.int32)
+
+
+# ---------------------------------------------------- radix prefix cache
+#
+# DESIGN.md §7: cross-request prefix sharing. Completed (or preempted)
+# requests publish their fully-written prompt pages — and, on the
+# KAPPA/ST-BoN winner path, the surviving generated prefix — into a
+# radix tree keyed on token ids at page granularity. Admission walks the
+# tree and aliases every matched page into the new request's block table
+# (one table ref per sharer, the tree keeps its pin), so chunked prefill
+# starts at the first uncached token. When the free heap runs dry, the
+# least-recently-hit pin-only leaves are released BEFORE any request is
+# preempted.
+
+
+class _RadixNode:
+    """One cached page. The edge key is the page's ``page_size``-token id
+    tuple relative to the parent chain's prefix; ``page`` is the pinned
+    physical page holding that prefix extent's K/V."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_hit")
+
+    def __init__(self, key, page, parent):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[tuple, "_RadixNode"] = {}
+        self.last_hit = 0
+
+
+class RadixPrefixCache:
+    """Cross-request radix tree over token-id prefixes, page-granular.
+
+    Nodes pin refcounted pages in a :class:`PageAllocator` (one pin per
+    node, taken at publish time before the publisher's block table drops
+    its reference — the page never transits the free heap). Keying on
+    the token ids from position 0 guarantees a matched page holds K/V
+    for exactly the positions a re-prefill would write, so aliasing it
+    is bitwise-equivalent to recomputation.
+
+    Only *full* pages are cacheable: a partially-written boundary page
+    mixes prefix content with slack a sharer would have to COW-copy
+    anyway, and its content is not a pure function of a page-granular
+    token key. Eviction (:meth:`evict_one`) releases the
+    least-recently-hit leaf whose page the tree is the sole referent of;
+    pages still aliased by live block tables are never candidates —
+    unpinning them would free nothing and forget reusable content."""
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self.root = _RadixNode((), None, None)
+        self._nodes = 0
+        self._clock = 0                      # monotonic hit/publish stamp
+        self.evictions = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _key(self, tokens: np.ndarray, k: int) -> tuple:
+        s = k * self.page_size
+        return tuple(int(t) for t in tokens[s:s + self.page_size])
+
+    def _iter_nodes(self):
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    @property
+    def pinned_count(self) -> int:
+        """Pages currently pinned by the tree (= node count)."""
+        return self._nodes
+
+    @property
+    def evictable_count(self) -> int:
+        """Pages the tree could hand back under pressure: pin-only
+        pages (no live block-table references). Rows alias contiguous
+        prefixes, so a pin-only node's whole subtree is pin-only too and
+        reachable leaf-by-leaf — this count is achievable, not just an
+        upper bound."""
+        return sum(1 for n in self._iter_nodes()
+                   if int(self.alloc.ref[n.page])
+                   == int(self.alloc.pinned[n.page]))
+
+    def lookup(self, tokens) -> List[int]:
+        """Physical pages of the longest cached page-granular prefix of
+        ``tokens`` (empty list on a miss), LRU-stamping every matched
+        node. The caller must alias the pages into a block table (taking
+        its own references) before anything else can trigger eviction."""
+        toks = np.asarray(tokens)
+        node, pages = self.root, []
+        stamp = self._tick()
+        k = 0
+        while (k + 1) * self.page_size <= len(toks):
+            child = node.children.get(self._key(toks, k))
+            if child is None:
+                break
+            child.last_hit = stamp
+            pages.append(child.page)
+            node = child
+            k += 1
+        return pages
+
+    def publish(self, tokens, pages: Sequence[int]) -> int:
+        """Pin ``pages`` — the block-table pages backing ``tokens``, one
+        per full page, in order — into the tree under their token keys.
+        Extents already cached are left alone (the earlier copy wins;
+        the content is identical by construction), so republishing a
+        shared preamble is idempotent. Returns the number of pages newly
+        pinned."""
+        toks = np.asarray(tokens)
+        node, new = self.root, 0
+        stamp = self._tick()
+        for k, page in enumerate(pages):
+            key = self._key(toks, k)
+            if len(key) < self.page_size:
+                break
+            child = node.children.get(key)
+            if child is None:
+                child = _RadixNode(key, int(page), node)
+                self.alloc.pin_page(int(page))
+                node.children[key] = child
+                self._nodes += 1
+                new += 1
+            child.last_hit = stamp
+            node = child
+        return new
+
+    def evict_one(self) -> "int | None":
+        """Release the least-recently-hit evictable leaf; returns the
+        physical page handed back to the free heap, or None when nothing
+        is evictable (every cached page is still aliased by a live
+        table — the caller falls through to preemption)."""
+        best = None
+        for node in self._iter_nodes():
+            if node.children:
+                continue
+            if int(self.alloc.ref[node.page]) \
+                    != int(self.alloc.pinned[node.page]):
+                continue
+            if best is None or node.last_hit < best.last_hit:
+                best = node
+        if best is None:
+            return None
+        del best.parent.children[best.key]
+        self.alloc.unpin_page(best.page)
+        self._nodes -= 1
+        self.evictions += 1
+        return best.page
+
+    def drop(self) -> int:
+        """Unpin every cached page and empty the tree (teardown); pages
+        whose pin was the last reference return to the free heap.
+        Returns the number of nodes dropped — after this the allocator
+        must account for every page again (the zero-leak check)."""
+        n = 0
+        for node in list(self._iter_nodes()):
+            self.alloc.unpin_page(node.page)
+            n += 1
+        self.root = _RadixNode((), None, None)
+        self._nodes = 0
+        return n
 
 
 def _map_layer_entries(cfg, cache: Dict[str, Any], other: Dict[str, Any],

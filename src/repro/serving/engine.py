@@ -57,26 +57,34 @@ _prefill_chunk_paged = jax.jit(prefill_chunk, static_argnums=(1, 4),
                                donate_argnums=(5, 8))
 
 
-def fused_decode_chunk(params, cfg: ModelConfig, token, pos, cache,
-                       block_tables, write_pages, chunk_tokens, chunk_pos0,
-                       chunk_bt, chunk_pages, aux):
-    """ONE device program advancing the whole decode pool AND one
-    PREFILLING request's next prompt chunk (DESIGN.md §6): the chunk
-    rides the tick's existing dispatch, so interleaved admission adds
-    chunk *compute* to a tick but no second host dispatch. The two
-    halves touch disjoint pool state — decode writes its rows'
-    allocator-certified pages, the chunk writes its own refcount-1
-    prompt pages and the batch-1 aux state."""
+def fused_decode_chunks(params, cfg: ModelConfig, token, pos, cache,
+                        block_tables, write_pages, chunks, auxs):
+    """ONE device program advancing the whole decode pool AND every
+    PREFILLING request's next prompt chunk (DESIGN.md §6): the chunks
+    ride the tick's existing dispatch, so interleaved admission adds
+    chunk *compute* to a tick but no second host dispatch — with prefix
+    -cache hits shortening prefills, several short tails per tick are
+    the common case, and each used to dispatch standalone. ``chunks`` is
+    a tuple of per-request ``(tokens, pos0, block_table, pages)``
+    operands; ``auxs`` the matching batch-1 aux states (donated — chunk
+    k+1's tick reuses chunk k's buffers). All parts touch disjoint pool
+    state — decode writes its rows' allocator-certified pages, each
+    chunk writes its own refcount-1 prompt pages and its own aux."""
     logits, cache = decode_step(params, cfg, token, pos, cache,
                                 block_tables, write_pages)
-    clogits, cache, aux = prefill_chunk(params, cfg, chunk_tokens,
-                                        chunk_pos0, 0, cache, chunk_bt,
-                                        chunk_pages, aux)
-    return logits, clogits, cache, aux
+    outs, auxs_out = [], []
+    for (chunk_tokens, chunk_pos0, chunk_bt, chunk_pages), aux \
+            in zip(chunks, auxs):
+        clogits, cache, aux = prefill_chunk(params, cfg, chunk_tokens,
+                                            chunk_pos0, 0, cache, chunk_bt,
+                                            chunk_pages, aux)
+        outs.append(clogits)
+        auxs_out.append(aux)
+    return logits, tuple(outs), cache, tuple(auxs_out)
 
 
-_fused_decode_chunk = jax.jit(fused_decode_chunk, static_argnums=(1,),
-                              donate_argnums=(4, 11))
+_fused_decode_chunks = jax.jit(fused_decode_chunks, static_argnums=(1,),
+                               donate_argnums=(4, 8))
 
 
 def _prefill_one(params, cfg: ModelConfig, prompt: np.ndarray, max_seq: int,

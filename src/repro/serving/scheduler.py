@@ -18,7 +18,11 @@ backends share one driver:
     youngest-admitted preemption when the pool runs dry), pruning drops
     page references the moment it happens, and queued requests are
     admitted shortest-job-first with bounded bypass among those that
-    fit.
+    fit. With ``prefix_cache=True`` a cross-request radix tree
+    (DESIGN.md §7) pins completed requests' prompt/winner pages so
+    later admissions alias them and prefill only the uncached tail;
+    under pressure, least-recently-hit cached pages are evicted
+    before any request is preempted.
 
 Shared driver behaviour per tick:
 
@@ -170,8 +174,8 @@ class _SchedulerBase:
         self.free: List[int] = list(range(rows))
         self.queue: deque = deque()          # _Queued items
         self.prefilling: Dict[int, _Prefill] = {}  # rid -> PREFILLING state
-        self._fused_rid: Optional[int] = None  # chunk riding this tick's
-        self._fused_chunk_out = None           # fused decode dispatch
+        self._fused_rids: List[int] = []     # chunks riding this tick's
+        self._fused_chunk_out = None         # fused decode dispatch
         self.active: Dict[int, tuple] = {}   # rid -> (RequestState, slots)
         self._slots_dev: Dict[int, object] = {}  # rid -> device slot idx
         self._items: Dict[int, _Queued] = {}  # rid -> original submission
@@ -357,6 +361,7 @@ class _SchedulerBase:
         self.token_times[item.rid] = [now]
         if rs.finished:  # e.g. greedy whose first token is already EOS
             self.results[item.rid] = rs.result()
+            self._publish_prefix(item, rs, slots)
             rs.strategy.release_pool()
             self._release(slots)
             self._items.pop(item.rid, None)
@@ -367,11 +372,12 @@ class _SchedulerBase:
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
 
-    def _fuse_candidate(self) -> Optional[int]:
-        """rid of the PREFILLING request whose next chunk should ride
-        the tick's fused decode dispatch instead of its own (backends
-        that support it return the oldest; base: none)."""
-        return None
+    def _fuse_candidates(self) -> List[int]:
+        """rids of the PREFILLING requests whose next chunks should ride
+        the tick's fused decode dispatch instead of their own standalone
+        dispatches (backends that support it return all of them in
+        admission order; base: none)."""
+        return []
 
     def _account_pages_tick(self) -> None:
         """Page-usage accounting for ticks that skip the decode path
@@ -394,20 +400,27 @@ class _SchedulerBase:
         """Advance every PREFILLING request by one chunk (admission
         order). A request whose final chunk just ran is finalized and
         activated in the same tick, so its rows join this tick's fused
-        decode step exactly like a one-shot admission would. The fuse
-        candidate (if any) is skipped here — its chunk runs inside the
-        decode dispatch and completes in ``_post_tick_prefill``."""
+        decode step exactly like a one-shot admission would. Fuse
+        candidates are skipped here — their chunks run inside the decode
+        dispatch and complete in ``_post_tick_prefill``."""
         t0 = time.perf_counter()
-        self._fused_rid = self._fuse_candidate()
+        self._fused_rids = self._fuse_candidates()
+        fused = set(self._fused_rids)
         for rid in sorted(list(self.prefilling),
                           key=lambda r: self._admit_seq[r]):
-            if rid != self._fused_rid:
+            if rid not in fused:
                 self._advance_one_prefill(rid)
         self.tick_time["prefill"] += time.perf_counter() - t0
 
     def _post_tick_prefill(self) -> None:
         """Finalize a fused chunk that completed its prompt this tick
         (the activated request joins the NEXT decode tick)."""
+
+    def _publish_prefix(self, item: Optional[_Queued], rs, slots) -> None:
+        """Completion hook, called BEFORE the request's storage is
+        released: backends may retain its prefix extent (the paged
+        backend publishes prompt + winner pages into the radix prefix
+        cache). Base: nothing to retain."""
 
     def _release(self, slots: List[int]) -> None:
         self._release_storage(slots)
@@ -477,13 +490,13 @@ class _SchedulerBase:
         self._advance_prefills()
         if not self.active:
             progressed = bool(self.prefilling)
-            if self._fused_rid is not None:
-                # the decode dispatch this chunk was to ride vanished
+            if self._fused_rids:
+                # the decode dispatch these chunks were to ride vanished
                 # (a sibling's page growth preempted the whole pool) —
-                # run the chunk standalone so the oldest prefill never
-                # loses its turn
-                rid, self._fused_rid = self._fused_rid, None
-                self._advance_one_prefill(rid)
+                # run them standalone so no prefill loses its turn
+                rids, self._fused_rids = self._fused_rids, []
+                for rid in rids:
+                    self._advance_one_prefill(rid)
             if progressed:
                 # PREFILLING requests hold rows (and, paged, pages) —
                 # account them so utilization metrics stay honest over
@@ -571,8 +584,12 @@ class _SchedulerBase:
                 self.results[rid] = rs.result()
                 del self.active[rid]
                 self._slots_dev.pop(rid, None)
-                self._items.pop(rid, None)
+                item = self._items.pop(rid, None)
                 self._admit_seq.pop(rid, None)
+                # publish BEFORE the pool slot / pages go away: the
+                # radix pin must adopt live refs, and kappa's winner
+                # check reads the pooled controller mirrors
+                self._publish_prefix(item, rs, slots)
                 rs.strategy.release_pool()
                 self._release(slots)
         self._post_tick_prefill()
@@ -771,6 +788,16 @@ class PagedScheduler(_SchedulerBase):
         set lower to serve more rows than a contiguous pool of the same
         byte budget could.
     max_bypass : SJF aging bound (see above).
+    prefix_cache : enable the cross-request radix prefix cache
+        (DESIGN.md §7). Completed/preempted requests publish their
+        fully-written prompt pages (and the winner's generated prefix)
+        into a radix tree that pins them in the allocator; later
+        admissions alias every matched page and chunk-prefill only the
+        uncached tail. Requires chunked admission (``prefill_chunk``)
+        and an all-global layer pattern — anything else silently keeps
+        the cache off (aux ring/recurrent state cannot be recovered
+        from pages, and only the chunked path can resume a prefill at a
+        nonzero offset).
     """
 
     def __init__(self, params, cfg: ModelConfig, kcfg: KappaConfig, *,
@@ -778,7 +805,8 @@ class PagedScheduler(_SchedulerBase):
                  num_pages: Optional[int] = None, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory=None, fused_sampling: bool = True,
-                 max_bypass: int = 4, prefill_chunk: Optional[int] = None):
+                 max_bypass: int = 4, prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False):
         max_seq = -(-max_seq // page_size) * page_size
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
@@ -794,6 +822,18 @@ class PagedScheduler(_SchedulerBase):
                                              rows, self.max_pages)
         self.pool = init_paged_cache(cfg, rows, self.num_pages, page_size,
                                      max_seq)
+        # radix prefix cache: only sound when every layer's KV is page-
+        # resident (all-global) and admission can resume a prefill at
+        # the cached extent (chunked)
+        self.pcache: Optional[cache_lib.RadixPrefixCache] = None
+        if prefix_cache and self._chunked_ok \
+                and all(bt == "global" for bt in cfg.block_types()):
+            self.pcache = cache_lib.RadixPrefixCache(self.alloc, page_size)
+        self.counters.update({
+            "prefix_hits": 0, "prefix_misses": 0,
+            "prefix_tokens_saved": 0, "prefix_evictions": 0,
+            "fused_chunks": 0,
+        })
         self._page_ticks = 0                 # Σ pages in use over ticks
         self._page_peak = 0                  # max pages in use at any tick
         self._bt_dev = None                  # device block tables (cached)
@@ -858,8 +898,14 @@ class PagedScheduler(_SchedulerBase):
                 f"{self.num_pages} (page_size={self.page_size})")
 
     def _admissible(self, item: _Queued) -> bool:
+        # pin-only cached pages count as free capacity: admission may
+        # rely on eviction (see _reclaim) — without this slack a pool
+        # whose free heap is all pinned prefixes would refuse every
+        # admission and stall run() with nothing active to preempt
+        slack = self.pcache.evictable_count if self.pcache is not None else 0
         return (len(self.free) >= item.fan_out
-                and self.alloc.can_alloc(self._initial_pages(item)))
+                and self.alloc.free_count + slack
+                >= self._initial_pages(item))
 
     def _select_admit(self) -> Optional[int]:
         # shortest-job-first among fitting requests, FIFO tie-break —
@@ -917,18 +963,40 @@ class PagedScheduler(_SchedulerBase):
         cands = list(self.active) + list(self.prefilling)
         return max(cands, key=lambda r: self._admit_seq[r])
 
+    def _publish_prompt_pages(self, prompt: np.ndarray, slot: int,
+                              upto: int) -> None:
+        """Pin the fully-written pages covering ``prompt[:upto]`` (row
+        ``slot``'s block-table prefix) into the radix tree — the
+        preemption-side publication point: the pages are about to lose
+        their table references, and re-prefilling them on re-admission
+        (or by any sharer) would be pure waste."""
+        if self.pcache is None:
+            return
+        k = upto // self.page_size
+        if k:
+            pages = [int(p) for p in self.alloc.block[slot, :k]]
+            self.pcache.publish(np.asarray(prompt)[:k * self.page_size],
+                                pages)
+
     def _preempt(self, rid: int) -> None:
         """Evict ``rid`` (active or mid-PREFILLING): free its pages and
         rows, return its original submission to the queue head. On
         re-admission it replays prefill and decode from its original RNG
         stream, so the final tokens are identical to a never-preempted
-        run."""
+        run. Fully-written prompt pages are published into the prefix
+        cache first (instead of freed) — the replay then aliases them
+        back, turning the preemption's lost prefill work into a cache
+        hit."""
         if rid in self.prefilling:
             pf = self.prefilling.pop(rid)
+            self._publish_prompt_pages(pf.item.prompt, pf.slots[0],
+                                       pf.filled)
             self._release(pf.slots)
         else:
             rs, slots = self.active.pop(rid)
             self._slots_dev.pop(rid, None)
+            self._publish_prompt_pages(self._items[rid].prompt, slots[0],
+                                       len(self._items[rid].prompt))
             rs.strategy.release_pool()
             self._release(slots)
         self._admit_seq.pop(rid, None)
@@ -938,12 +1006,29 @@ class PagedScheduler(_SchedulerBase):
         self.queue.appendleft(self._items.pop(rid))
         self.counters["preemptions"] += 1
 
+    def _reclaim(self, n: int) -> bool:
+        """Make ``n`` pages allocatable by evicting least-recently-hit
+        pin-only pages from the prefix cache. Eviction is ordered BEFORE
+        preemption at every allocation site: dropping cached-but-idle
+        prefix pages only costs a future re-prefill, while preemption
+        throws away live decode progress — and without this ordering
+        pinned pages could hold the heap dry forever (nothing ever
+        unpins them) and deadlock admission. Returns False when the free
+        heap is still short and nothing is evictable (the caller falls
+        through to preemption)."""
+        while not self.alloc.can_alloc(n):
+            if self.pcache is None or self.pcache.evict_one() is None:
+                return False
+            self.counters["prefix_evictions"] += 1
+        return True
+
     def _ensure_pages(self) -> None:
         """Lazy growth: before the fused decode step, every active row
         whose position has crossed into an unallocated logical page
-        acquires the next page from the free heap. Requests grow in
-        admission order (oldest first); when the heap is empty the
-        youngest-admitted request is preempted — possibly the grower
+        acquires the next page from the free heap (evicting cached
+        prefix pages first — :meth:`_reclaim`). Requests grow in
+        admission order (oldest first); when nothing more is evictable
+        the youngest-admitted request is preempted — possibly the grower
         itself, when everything younger is already gone."""
         for rid in sorted(self.active, key=lambda r: self._admit_seq[r]):
             if rid not in self.active:       # preempted below
@@ -953,7 +1038,7 @@ class PagedScheduler(_SchedulerBase):
             for s in slots:
                 lp = int(self.row_pos[s]) // self.page_size
                 while int(self.alloc.owned[s]) <= lp:
-                    if self.alloc.can_alloc(1):
+                    if self._reclaim(1):
                         self.alloc.append_page(s)
                         self._bt_dev = None
                         continue
@@ -986,7 +1071,27 @@ class PagedScheduler(_SchedulerBase):
         aux = init_cache(self.cfg, 1, max(self._ring_window(), 1))
         self.admit_peak_bytes = max(self.admit_peak_bytes,
                                     cache_lib.cache_bytes(aux))
-        return _Prefill(item=item, slots=slots, aux=aux)
+        pf = _Prefill(item=item, slots=slots, aux=aux)
+        if self.pcache is not None:
+            # alias every cached prefix page into slot[0]'s table and
+            # start the chunked prefill at the first uncached token.
+            # Cap: the LAST prompt token always re-prefills — sampling
+            # needs the final position's logits, which only a live
+            # prefill chunk produces — so a "full hit" still runs one
+            # short tail chunk (and, page-aligned, rewrites the final
+            # page; its fresh copy doubles as the COW write target)
+            plen = len(item.prompt)
+            pages = self.pcache.lookup(item.prompt)
+            pages = pages[:(plen - 1) // self.page_size]
+            if pages:
+                self.alloc.set_row_pages(slots[0], pages)
+                pf.filled = len(pages) * self.page_size
+                self._bt_dev = None
+                self.counters["prefix_hits"] += 1
+                self.counters["prefix_tokens_saved"] += pf.filled
+            else:
+                self.counters["prefix_misses"] += 1
+        return pf
 
     # compile-count bound for long prompts: the chunk's block-table
     # prefix width is bucketed to a page multiple, so a P-page prompt
@@ -1003,7 +1108,7 @@ class PagedScheduler(_SchedulerBase):
         c = min(self.prefill_chunk, len(item.prompt) - pf.filled)
         need = self.alloc.pages_for(pf.filled + c)
         while int(self.alloc.owned[s0]) < need:
-            if self.alloc.can_alloc(1):
+            if self._reclaim(1):
                 if int(self.alloc.owned[s0]) == 0:
                     self.alloc.set_row_pages(s0, self.alloc.alloc_pages(1))
                 else:
@@ -1061,7 +1166,7 @@ class PagedScheduler(_SchedulerBase):
         boundary = 1 if (n > 1 and pos0 % self.page_size) else 0
         if n > 1:
             need = boundary * (n - 1)
-            while not self.alloc.can_alloc(need):
+            while not self._reclaim(need):
                 victim = self._youngest_started()
                 self._preempt(victim)
                 if victim == item.rid:
@@ -1084,27 +1189,38 @@ class PagedScheduler(_SchedulerBase):
         self._bt_dev = None
         return True
 
-    def _fuse_candidate(self) -> Optional[int]:
-        # the OLDEST prefilling request rides the decode dispatch: one
-        # tick = one fused device program = decode + one prompt chunk
-        # (younger concurrent prefills dispatch standalone)
+    def _fuse_candidates(self) -> List[int]:
+        # EVERY prefilling request rides the decode dispatch: one tick =
+        # one fused device program = decode + all concurrent prompt
+        # chunks (PR 5 fused only the oldest; with prefix-cache hits
+        # shortening prefills, several short tails per tick are the
+        # common case, and each younger one used to dispatch standalone)
         if not self.active or not self.prefilling:
-            return None
-        return min(self.prefilling, key=lambda r: self._admit_seq[r])
+            return []
+        return sorted(self.prefilling, key=lambda r: self._admit_seq[r])
 
     def _account_pages_tick(self) -> None:
         self._page_ticks += self.alloc.used_count
         self._page_peak = max(self._page_peak, self.alloc.used_count)
 
     def _decode_tick(self):
-        # grow the fused chunk's pages FIRST — growth can preempt, which
-        # must settle before write pages are certified below
-        fused_c = None
-        pf = self.prefilling.get(self._fused_rid) \
-            if self._fused_rid is not None else None
-        if pf is not None:
-            fused_c = self._grow_for_chunk(pf)
+        # grow every fused chunk's pages FIRST — growth can evict or
+        # preempt, which must settle before write pages are certified
+        # below (growth runs in admission order, matching the standalone
+        # dispatch order a non-fusing backend would use)
+        fused = []                           # (rid, pf, chunk_len)
+        for rid in self._fused_rids:
+            pf = self.prefilling.get(rid)
+            if pf is None:
+                continue                     # preempted by an older grower
+            c = self._grow_for_chunk(pf)
+            if c is not None:
+                fused.append((rid, pf, c))
         self._ensure_pages()
+        # a younger fused chunk may have been preempted by a LATER
+        # grower or by active-row growth — keep only survivors
+        fused = [f for f in fused if f[0] in self.prefilling]
+        self._fused_rids = [f[0] for f in fused]
         # COW guard: every active row's write page must be refcount-1
         # (allocator truth); the certified pages are pinned into the
         # decode step so a write physically cannot land on a shared page
@@ -1116,16 +1232,23 @@ class PagedScheduler(_SchedulerBase):
         self._account_pages_tick()
         if self._bt_dev is None:
             self._bt_dev = jnp.asarray(self.alloc.block)
-        if fused_c is not None and self._fused_rid in self.prefilling:
-            toks, pos0, bt, cpages = self._chunk_args(pf, fused_c)
-            logits, clogits, self.pool, pf.aux = engine._fused_decode_chunk(
+        if fused:
+            self.counters["fused_chunks"] += len(fused)
+            chunks, auxs_in = [], []
+            for rid, pf, c in fused:
+                chunks.append(self._chunk_args(pf, c))
+                auxs_in.append(pf.aux)
+            logits, clogits, self.pool, auxs = engine._fused_decode_chunks(
                 self.params, self.cfg, jnp.asarray(self.row_token),
                 jnp.asarray(self.row_pos), self.pool, self._bt_dev,
-                jnp.asarray(wp), toks, pos0, bt, cpages, pf.aux)
-            pf.filled += fused_c
-            self._fused_chunk_out = clogits
+                jnp.asarray(wp), tuple(chunks), tuple(auxs_in))
+            out = {}
+            for (rid, pf, c), cl, aux in zip(fused, clogits, auxs):
+                pf.filled += c
+                pf.aux = aux
+                out[rid] = cl
+            self._fused_chunk_out = out
             return logits
-        self._fused_rid = None
         logits, self.pool = _paged_step(
             self.params, self.cfg, jnp.asarray(self.row_token),
             jnp.asarray(self.row_pos), self.pool, self._bt_dev,
@@ -1133,20 +1256,73 @@ class PagedScheduler(_SchedulerBase):
         return logits
 
     def _post_tick_prefill(self) -> None:
-        rid = self._fused_rid
-        self._fused_rid = None
-        if rid is None or rid not in self.prefilling:
+        rids, self._fused_rids = self._fused_rids, []
+        out, self._fused_chunk_out = self._fused_chunk_out, None
+        if not rids or out is None:
             return
-        pf = self.prefilling[rid]
-        if pf.filled < len(pf.item.prompt):
+        for rid in rids:
+            pf = self.prefilling.get(rid)
+            # absent = preempted by an older sibling's finalize below
+            if pf is None or pf.filled < len(pf.item.prompt):
+                continue
+            if self._finish_prefill(pf):
+                del self.prefilling[rid]
+                # rows join the NEXT decode tick (the chunk's logits
+                # only materialized with this tick's compute)
+                self._start_request(pf.item, pf.slots, out[rid][0])
+
+    # ------------------------------------------- prefix-cache publication
+
+    def _winner_extent(self, rs) -> Optional[int]:
+        """Index into ``rs.branch_ids``/slots of the branch whose
+        fed-token sequence is exactly reconstructible from the token log
+        (prompt ++ logged tokens ++ forced-EOS tail), or None → publish
+        the prompt extent only. Reconstruction fails when the chosen
+        branch's rows were already released (BoN's eager EOS freeing) or
+        when kappa chose a pruned-but-uncompacted branch (its post-prune
+        fed tokens were sampled, not EOS, and never logged)."""
+        chosen = rs.strategy.choose(rs.branch_ids, rs.done)
+        where = np.nonzero(rs.branch_ids == chosen)[0]
+        if where.size == 0:
+            return None
+        idx = int(where[0])
+        if isinstance(rs.strategy, strategies.KappaStrategy):
+            alive, _ = rs.strategy._alive_traj()
+            if not bool(alive[idx]):
+                return None
+        return idx
+
+    def publish_generated_prefix(self, item: _Queued, rs, slots) -> None:
+        """Completion-side publication (the Path-Consistency scenario):
+        pin the winner's full fully-written extent — prompt AND
+        surviving generated prefix — into the radix tree, so a later
+        sampling of the same problem that extends this prefix aliases
+        the winner's pages instead of re-prefilling them. The fed
+        sequence is prompt ++ log[:-1] (the last logged token was
+        sampled but never fed) padded with the forced-EOS feeds of
+        post-done ticks; when that reconstruction isn't certain
+        (:meth:`_winner_extent`) only the prompt pages are published."""
+        if self.pcache is None or item is None or not slots:
             return
-        if self._finish_prefill(pf):
-            del self.prefilling[rid]
-            # rows join the NEXT decode tick (the chunk's logits only
-            # materialized with this tick's compute)
-            self._start_request(pf.item, pf.slots,
-                                self._fused_chunk_out[0])
-        self._fused_chunk_out = None
+        prompt = np.asarray(item.prompt)
+        idx = self._winner_extent(rs)
+        if idx is None:
+            self._publish_prompt_pages(prompt, slots[0], len(prompt))
+            return
+        chosen = int(rs.branch_ids[idx])
+        L = int(rs.log.len[chosen])
+        fed = rs.log.buf[chosen, :max(L - 1, 0)]
+        gap = int(rs.pos) - len(prompt) - len(fed)
+        seq = np.concatenate(
+            [prompt, fed,
+             np.full((max(gap, 0),), self.eos_id)])[:int(rs.pos)]
+        k = len(seq) // self.page_size
+        if k:
+            pages = [int(p) for p in self.alloc.block[slots[idx], :k]]
+            self.pcache.publish(seq[:k * self.page_size], pages)
+
+    def _publish_prefix(self, item, rs, slots) -> None:
+        self.publish_generated_prefix(item, rs, slots)
 
     # ----------------------------------------------------------- metrics
 
@@ -1168,4 +1344,12 @@ class PagedScheduler(_SchedulerBase):
         out["page_utilization"] = (self._page_ticks
                                    / max(self.ticks * self.num_pages, 1))
         out["page_peak"] = self._page_peak
+        # prefix-cache observability (zeros when the cache is off): the
+        # prefix_hits/misses/tokens_saved/evictions counters ride along
+        # via the shared counters dict above
+        looked = (self.counters["prefix_hits"]
+                  + self.counters["prefix_misses"])
+        out["prefix_hit_rate"] = self.counters["prefix_hits"] / max(looked, 1)
+        out["prefix_pinned_pages"] = (self.pcache.pinned_count
+                                      if self.pcache is not None else 0)
         return out

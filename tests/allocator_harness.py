@@ -1,7 +1,7 @@
 """Shared PageAllocator test harness (no test deps beyond numpy):
-the global invariant checker and the alloc/share/COW-diverge/free
-op-stream interpreter. Driven by the hypothesis property test in
-``test_property.py``, the seeded tier-1 twin in ``test_paged.py`` and
+the global invariant checker and the alloc/share/COW-diverge/free/
+pin/unpin op-stream interpreter. Driven by the hypothesis property test
+in ``test_property.py``, the seeded tier-1 twin in ``test_paged.py`` and
 the fuzz-equivalence leak checks — one interpreter, so an invariant
 added here is enforced everywhere at once."""
 import numpy as np
@@ -10,10 +10,12 @@ from repro.serving import cache as cache_lib
 
 
 def check_invariants(alloc: "cache_lib.PageAllocator") -> None:
-    """Refcounts match block-table references exactly, every referenced
-    page has ref >= 1, a page sits in two tables only while ref > 1,
-    owned prefixes hold real pages with all-trash tails, and free-heap +
-    referenced partition the pool (no leak, no double free)."""
+    """Refcounts partition into block-table references plus radix pins
+    exactly, every referenced page has ref >= 1, a pinned page is live
+    (pin implies ref >= 1 by construction), free pages carry no pins, a
+    page sits in two tables only while ref > 1, owned prefixes hold real
+    pages with all-trash tails, and free-heap + referenced partition the
+    pool (no leak, no double free)."""
     refs = np.zeros((alloc.num_pages,), np.int64)
     for r in range(alloc.rows):
         n = int(alloc.owned[r])
@@ -21,11 +23,16 @@ def check_invariants(alloc: "cache_lib.PageAllocator") -> None:
         assert np.all(alloc.block[r, n:] == alloc.trash)
         for p in alloc.block[r, :n]:
             refs[int(p)] += 1
-    assert np.array_equal(refs, alloc.ref), "refcount drift"
+    assert np.array_equal(refs + alloc.pinned, alloc.ref), \
+        "refcount drift (table refs + pins != ref)"
+    assert np.all(alloc.pinned >= 0), "negative pin count"
+    assert np.all(alloc.ref[alloc.pinned > 0] >= 1), \
+        "pinned page without a live reference"
     free = set(alloc.free_pages)
     assert len(free) == len(alloc.free_pages), "duplicate free page"
-    assert all(refs[p] == 0 for p in free), "freed page still referenced"
-    assert all(refs[p] > 0 for p in range(alloc.num_pages)
+    assert all(alloc.ref[p] == 0 for p in free), "freed page still referenced"
+    assert all(alloc.pinned[p] == 0 for p in free), "freed page still pinned"
+    assert all(alloc.ref[p] > 0 for p in range(alloc.num_pages)
                if p not in free), "leaked page (zero refs, not free)"
     # shared pages (in >1 table) must carry ref > 1 — COW soundness
     counts: dict = {}
@@ -34,7 +41,7 @@ def check_invariants(alloc: "cache_lib.PageAllocator") -> None:
             counts[int(p)] = counts.get(int(p), 0) + 1
     for p, c in counts.items():
         if c > 1:
-            assert alloc.ref[p] == c > 1
+            assert alloc.ref[p] == c + alloc.pinned[p] > 1
 
 
 def run_allocator_ops(num_pages, page_size, rows, max_pages, ops):
@@ -42,9 +49,13 @@ def run_allocator_ops(num_pages, page_size, rows, max_pages, ops):
     the invariants after every step. Ops are (kind, a, b) with the
     operands reduced mod the current candidates, so any integer triple
     is a valid program — which is what makes a failing case
-    shrinkable."""
+    shrinkable. ``pin``/``unpin`` model the radix prefix cache's claim
+    on live pages: pins keep a page out of the free heap across every
+    table dropping it, and the end-of-stream unpin-all is the tree-drop
+    zero-leak check."""
     alloc = cache_lib.PageAllocator(num_pages, page_size, rows, max_pages)
     owners = []                              # rows with any pages
+    pins = []                                # pages pinned by the "tree"
     for kind, a, b in ops:
         free_rows = [r for r in range(rows) if not alloc.owned[r]]
         if kind == "alloc" and free_rows:
@@ -68,8 +79,23 @@ def run_allocator_ops(num_pages, page_size, rows, max_pages, ops):
         elif kind == "free" and owners:
             r = owners.pop(a % len(owners))
             alloc.free_row(r)
+        elif kind == "pin" and owners:
+            # publish: pin a live page some row references
+            r = owners[a % len(owners)]
+            pages = alloc.row_pages(r)
+            if len(pages):
+                p = int(pages[b % len(pages)])
+                alloc.pin_page(p)
+                pins.append(p)
+        elif kind == "unpin" and pins:
+            # eviction: release one pin (page may outlive or die)
+            alloc.unpin_page(pins.pop(a % len(pins)))
         check_invariants(alloc)
     for r in list(owners):
         alloc.free_row(r)
     check_invariants(alloc)
+    for p in pins:                           # tree drop
+        alloc.unpin_page(p)
+    check_invariants(alloc)
     assert alloc.free_count == alloc.num_pages, "quiescent leak"
+    assert int(alloc.pinned.sum()) == 0, "quiescent pin"

@@ -2,13 +2,19 @@
 
 One generated workload — mixed kappa/bon/stbon/greedy strategies,
 random prompt lengths (including page-aligned prompts and prompts
-shorter than one chunk), random per-request ``max_new``, random submit
-order — is served four ways and must stay token-for-token identical:
+shorter than one chunk), a random shared preamble so request mixes
+overlap on token prefixes, random per-request ``max_new``, random
+submit order — is served six ways and must stay token-for-token
+identical:
 
   * the sequential engine (the reference),
   * the contiguous scheduler with chunked admission,
   * the paged scheduler with chunked admission (generous pages),
-  * the paged scheduler under forced page pressure (preemption live).
+  * the paged scheduler under forced page pressure (preemption live),
+  * the paged scheduler with the radix prefix cache on (PR 6): later
+    requests alias earlier requests' published pages,
+  * the prefix cache under forced page pressure (eviction racing
+    preemption).
 
 Shapes are pinned (one ``max_seq``, one page size, a small chunk-size
 menu) so the jit cache is shared across cases and the sweep stays
@@ -54,6 +60,9 @@ def setup():
     return cfg, params, kcfg
 
 
+PRE_LENS = (0, 4, 8, 11)     # shared-preamble lengths (0 = disjoint)
+
+
 def _case_from_seed(seed: int, n_requests=None):
     """Seeded case generator — the no-hypothesis path (and the prompt
     body source for both paths)."""
@@ -66,13 +75,22 @@ def _case_from_seed(seed: int, n_requests=None):
                      int(rng.choice(MAX_NEWS))))
     return {"seed": seed, "reqs": reqs,
             "order": rng.permutation(n).tolist(),
-            "chunk": int(rng.choice(CHUNKS))}
+            "chunk": int(rng.choice(CHUNKS)),
+            "pre_len": int(rng.choice(PRE_LENS))}
 
 
-def _prompt(seed: int, i: int, plen: int) -> np.ndarray:
+def _prompt(seed: int, i: int, plen: int, pre_len: int = 0) -> np.ndarray:
+    """BOS + shared preamble prefix + private body + QM. Every request
+    of one case draws the SAME per-case preamble, so requests whose
+    bodies are long enough share a real token prefix — the radix
+    prefix-cache hit population (and, truncated at ``plen``, a source of
+    partial-page overlaps the page-granular keying must not match)."""
+    body_len = plen - 2
+    head = np.random.default_rng(seed * 7 + 3).integers(
+        0, tok.MOD, size=min(pre_len, body_len))
     body = np.random.default_rng(seed * 1000 + i).integers(
-        0, tok.MOD, size=plen - 2)
-    return np.concatenate([[tok.BOS], body, [tok.QM]])
+        0, tok.MOD, size=body_len - len(head))
+    return np.concatenate([[tok.BOS], head, body, [tok.QM]])
 
 
 def _worst_pages(method: str, plen: int, max_new: int, n_branch: int) -> int:
@@ -88,7 +106,8 @@ from allocator_harness import check_invariants as _allocator_invariants  # noqa:
 def _run_case(setup, case):
     cfg, params, kcfg = setup
     reqs, order, chunk = case["reqs"], case["order"], case["chunk"]
-    prompts = [_prompt(case["seed"], i, plen)
+    pre_len = case.get("pre_len", 0)
+    prompts = [_prompt(case["seed"], i, plen, pre_len)
                for i, (_, plen, _) in enumerate(reqs)]
 
     seq = []
@@ -123,6 +142,16 @@ def _run_case(setup, case):
             params, cfg, kcfg, rows=8, max_seq=MAX_SEQ,
             page_size=PAGE_SIZE, num_pages=tight, method="kappa",
             eos_id=tok.EOS, bos_id=tok.BOS, prefill_chunk=chunk),
+        "paged-prefix": PagedScheduler(
+            params, cfg, kcfg, rows=8, max_seq=MAX_SEQ,
+            page_size=PAGE_SIZE, num_pages=8 * MAX_SEQ // PAGE_SIZE,
+            method="kappa", eos_id=tok.EOS, bos_id=tok.BOS,
+            prefill_chunk=chunk, prefix_cache=True),
+        "paged-prefix-pressure": PagedScheduler(
+            params, cfg, kcfg, rows=8, max_seq=MAX_SEQ,
+            page_size=PAGE_SIZE, num_pages=tight, method="kappa",
+            eos_id=tok.EOS, bos_id=tok.BOS, prefill_chunk=chunk,
+            prefix_cache=True),
     }
     for name, sched in modes.items():
         res = serve(sched)
@@ -135,9 +164,13 @@ def _run_case(setup, case):
             assert s.steps == c.steps, ctx
         assert sorted(sched.free) == list(range(8)), name
         assert not sched.prefilling and not sched.active, name
+        if getattr(sched, "pcache", None) is not None:
+            _allocator_invariants(sched.alloc)   # with live pins
+            sched.pcache.drop()                  # tree drop frees pins
         if hasattr(sched, "alloc"):
             assert sched.alloc.free_count == sched.num_pages, \
                 f"{name}: leaked pages"
+            assert int(sched.alloc.pinned.sum()) == 0, name
             _allocator_invariants(sched.alloc)
 
 
@@ -148,7 +181,7 @@ def test_fuzz_equivalence_small(setup):
     prompt, a prompt shorter than the chunk, forced page pressure."""
     case = {"seed": 7,
             "reqs": [("kappa", 8, 10), ("greedy", 3, 6), ("bon", 9, 6)],
-            "order": [1, 0, 2], "chunk": 5}
+            "order": [1, 0, 2], "chunk": 5, "pre_len": 8}
     _run_case(setup, case)
 
 
@@ -157,7 +190,7 @@ def test_fuzz_equivalence_stbon_aligned(setup):
     exact multiple of both page size and chunk."""
     case = {"seed": 13,
             "reqs": [("stbon", 16, 10), ("kappa", 5, 6)],
-            "order": [0, 1], "chunk": 4}
+            "order": [0, 1], "chunk": 4, "pre_len": 11}
     _run_case(setup, case)
 
 
@@ -177,7 +210,9 @@ if HAVE_HYPOTHESIS:
         order = data.draw(st.permutations(range(n)), label="order")
         case = {"seed": data.draw(st.integers(0, 9999), label="seed"),
                 "reqs": reqs, "order": list(order),
-                "chunk": data.draw(st.sampled_from(CHUNKS), label="chunk")}
+                "chunk": data.draw(st.sampled_from(CHUNKS), label="chunk"),
+                "pre_len": data.draw(st.sampled_from(PRE_LENS),
+                                     label="pre_len")}
         _run_case(setup, case)
 else:
     @pytest.mark.slow

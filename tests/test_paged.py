@@ -127,11 +127,12 @@ def test_allocator_seeded_interleaving_invariants():
     pages leaked at quiescence."""
     from allocator_harness import run_allocator_ops
     rng = np.random.RandomState(42)
-    kinds = ["alloc", "share", "diverge", "free"]
+    kinds = ["alloc", "share", "diverge", "free", "pin", "unpin"]
     for trial in range(6):
         num_pages = int(rng.randint(6, 24))
         max_pages = int(rng.randint(2, 6))
-        ops = [(kinds[int(rng.randint(4))], int(rng.randint(10 ** 6)),
+        ops = [(kinds[int(rng.randint(len(kinds)))],
+                int(rng.randint(10 ** 6)),
                 int(rng.randint(10 ** 6))) for _ in range(120)]
         run_allocator_ops(num_pages, 4, 8, max_pages, ops)
 

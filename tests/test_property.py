@@ -144,14 +144,16 @@ from allocator_harness import run_allocator_ops  # noqa: E402
 @given(num_pages=st.integers(4, 24), page_size=st.sampled_from([4, 8]),
        rows=st.integers(2, 8), max_pages=st.integers(1, 6),
        ops=st.lists(st.tuples(
-           st.sampled_from(["alloc", "share", "diverge", "free"]),
+           st.sampled_from(["alloc", "share", "diverge", "free",
+                            "pin", "unpin"]),
            st.integers(0, 10 ** 6), st.integers(0, 10 ** 6)),
            max_size=60))
 @settings(**SETTINGS)
 def test_page_allocator_interleaving_invariants(num_pages, page_size, rows,
                                                 max_pages, ops):
-    """Random interleavings of alloc / share / COW-diverge / free keep
-    every allocator invariant and leak nothing at quiescence."""
+    """Random interleavings of alloc / share / COW-diverge / free /
+    radix-pin / unpin keep every allocator invariant (refcount = table
+    refs + pins) and leak nothing at quiescence after the tree drop."""
     run_allocator_ops(num_pages, page_size, rows, max_pages, ops)
 
 
