@@ -375,6 +375,96 @@ def _interleave_scenario(cfg, params):
     }]
 
 
+OVERLOAD_DEPTH = 6              # unloaded load: drains with minimal queuing
+OVERLOAD_BURST = 2 * OVERLOAD_DEPTH  # the open-loop 2x burst
+OVERLOAD_QUEUE = 8              # bounded admission queue during the burst
+OVERLOAD_REPS = 2               # best-of-R for the ITL percentiles
+
+
+def _itl_p99_s(sched, rids):
+    itl = [t1 - t0 for r in rids
+           for t0, t1 in zip(sched.token_times.get(r, []),
+                             sched.token_times.get(r, [])[1:])]
+    return float(np.percentile(np.asarray(itl or [0.0]), 99))
+
+
+def _overload_scenario(cfg, params):
+    """Graceful overload degradation (DESIGN.md §8): an open-loop burst
+    at 2x the unloaded depth, served under a bounded admission queue and
+    per-request tick budgets (the deterministic twin of wall-clock
+    deadlines). The contract: excess load is SHED at the door, requests
+    that cannot finish inside their budget TIMEOUT with partial tokens,
+    and the requests that ARE admitted keep decoding at unloaded speed —
+    admitted-ITL p99 within 1.5x of the unloaded baseline. Reported:
+    shed rate, deadline-miss rate, goodput (OK logical tokens/s)."""
+    kcfg = _kcfg()
+    # one fan-out of rows: the pool is genuinely saturated (requests
+    # admit one at a time, pruning backfills), so a 2x burst is real
+    # overload rather than slack absorption
+    rows = kcfg.num_branches
+    prompts = _prompts(OVERLOAD_BURST)
+    max_seq = max(len(p) for p in prompts) + kcfg.max_new_tokens
+
+    def run_once(n_req, *, max_queue=None, ticks=None):
+        sched = ContinuousBatchingScheduler(
+            params, cfg, kcfg, rows=rows, max_seq=max_seq, method="kappa",
+            eos_id=tok.EOS, bos_id=tok.BOS,
+            strategy_factory=_strategy_factory("kappa", kcfg),
+            max_queue=max_queue)
+        rids = [sched.submit(prompts[i], jax.random.PRNGKey(i),
+                             max_wall_ticks=ticks) for i in range(n_req)]
+        res = sched.run()
+        return sched, rids, res
+
+    sched_w, _, _ = run_once(OVERLOAD_DEPTH)  # absorb jit compiles
+    # all requests are submitted at tick 0, so the tick budget is an
+    # absolute completion deadline. Keyed to the measured unloaded drain
+    # (not max_new — how long requests actually run depends on how early
+    # the model EOSes): the unloaded load fits with 10% slack; the 2x
+    # burst admits ~8/6 the work through a saturated pool, so its tail
+    # cannot
+    budget = int(1.1 * sched_w.ticks)
+    base_itl, over = None, None
+    for _ in range(OVERLOAD_REPS):           # interleaved best-of-R
+        sched_u, rids_u, _ = run_once(OVERLOAD_DEPTH)
+        itl_u = _itl_p99_s(sched_u, rids_u)
+        base_itl = itl_u if base_itl is None else min(base_itl, itl_u)
+        sched_o, rids_o, res = run_once(OVERLOAD_BURST,
+                                        max_queue=OVERLOAD_QUEUE,
+                                        ticks=budget)
+        ok = [r for r in rids_o if res[r].status == "OK"]
+        itl_o = _itl_p99_s(sched_o, ok)
+        if over is None or itl_o < over["itl"]:
+            over = {"sched": sched_o, "rids": rids_o, "res": res,
+                    "ok": ok, "itl": itl_o}
+    sched_o, rids_o, res, ok = (over["sched"], over["rids"], over["res"],
+                                over["ok"])
+    statuses = [res[r].status for r in rids_o]
+    # the burst must actually exercise all three outcomes — degrade,
+    # don't collapse: some served, some shed at the door, some truncated
+    assert ok, f"overload starved every request: {statuses}"
+    assert "SHED" in statuses, "burst never hit the queue bound"
+    assert "TIMEOUT" in statuses, "tick budget never fired — raise burst"
+    # timed-out requests keep their partial decode (truncate-and-return)
+    assert all(res[r].steps > 0 for r in rids_o
+               if res[r].status == "TIMEOUT" and r in sched_o.token_times)
+    goodput = sum(res[r].logical_tokens for r in ok) \
+        / max(sched_o.elapsed, 1e-9)
+    return [{
+        "kind": "overload", "method": "kappa", "rows": rows,
+        "depth": OVERLOAD_DEPTH, "burst": OVERLOAD_BURST,
+        "max_queue": OVERLOAD_QUEUE, "tick_budget": budget,
+        "served_ok": len(ok),
+        "shed_rate": statuses.count("SHED") / len(rids_o),
+        "deadline_miss_rate": statuses.count("TIMEOUT") / len(rids_o),
+        "goodput_tokens_per_s": goodput,
+        "baseline_itl_p99_s": base_itl,
+        "overload_itl_p99_s": over["itl"],
+        "overload_vs_baseline_itl_p99": over["itl"] / max(base_itl, 1e-9),
+        "ticks": sched_o.ticks, "time_s": sched_o.elapsed,
+    }]
+
+
 def run(cfg, params):
     kcfg = _kcfg()
     fan_out = kcfg.num_branches
@@ -547,6 +637,7 @@ def run(cfg, params):
     out.extend(_fanout_scenario(cfg, params))
     out.extend(_interleave_scenario(cfg, params))
     out.extend(_prefix_scenario(cfg, params))
+    out.extend(_overload_scenario(cfg, params))
     return out
 
 
@@ -577,6 +668,15 @@ def emit_csv(rows):
                        f"cached_tok_s={r['cached_tokens_per_s']:.1f};"
                        f"uncached_tok_s={r['uncached_tokens_per_s']:.1f};"
                        f"evictions={r['prefix_evictions']}")
+        elif r["kind"] == "overload":
+            name = f"throughput/overload_burst{r['burst']}"
+            us = r["overload_itl_p99_s"] * 1e6
+            derived = (f"base_itl_p99_us={r['baseline_itl_p99_s'] * 1e6:.0f};"
+                       f"over_itl_p99_us={r['overload_itl_p99_s'] * 1e6:.0f};"
+                       f"ratio={r['overload_vs_baseline_itl_p99']:.2f};"
+                       f"shed_rate={r['shed_rate']:.2f};"
+                       f"miss_rate={r['deadline_miss_rate']:.2f};"
+                       f"goodput_tok_s={r['goodput_tokens_per_s']:.1f}")
         elif r["kind"] == "fanout":
             name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
             us = r["time_s"] * 1e6 / max(r["ticks"], 1)
@@ -669,6 +769,18 @@ if __name__ == "__main__":
                   f"tokens saved ({r['prefill_tokens_saved_frac']:.0%}, "
                   f">=50% target), cached serving "
                   f"{r['cached_vs_uncached']:.2f}x uncached -> {verdict}")
+    for r in rows:
+        if r["kind"] == "overload":
+            ratio = r["overload_vs_baseline_itl_p99"]
+            verdict = "PASS" if ratio <= 1.5 else "FAIL"
+            print(f"# overload: {r['burst']}-request burst over a "
+                  f"{r['depth']}-deep unloaded pool (queue bound "
+                  f"{r['max_queue']}, {r['tick_budget']}-tick budget) — "
+                  f"{r['served_ok']} served, shed rate {r['shed_rate']:.0%}, "
+                  f"deadline-miss rate {r['deadline_miss_rate']:.0%}, "
+                  f"goodput {r['goodput_tokens_per_s']:.1f} tok/s; "
+                  f"admitted ITL p99 {ratio:.2f}x unloaded "
+                  f"(<=1.5 target) -> {verdict}")
     for r in rows:
         if r["kind"] == "fanout":
             print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "

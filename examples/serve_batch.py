@@ -56,3 +56,13 @@ print(f"paged pool        (N=5, rows=20): {pg5['tokens_per_s']:.1f} tok/s, "
       f"{pg5['requests_per_s']:.2f} req/s, "
       f"page utilization {pg5['page_utilization']:.2f} "
       f"(wall {pg5['time_s']:.1f}s)")
+
+# per-terminal-status summary: with no faults, deadlines, or queue bound
+# every request should land in OK — anything else is worth seeing here
+for name, r in [("continuous", cb5), ("paged", pg5)]:
+    sc = r["status_counts"]
+    print(f"{name} statuses: "
+          + " ".join(f"{k}={sc.get(k, 0)}"
+                     for k in ("OK", "CANCELLED", "TIMEOUT", "FAILED",
+                               "SHED"))
+          + f" (retries={r['retries']})")

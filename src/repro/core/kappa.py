@@ -79,11 +79,15 @@ def _all_pairwise_diverged(state: KappaState) -> jnp.ndarray:
     return jnp.all(state.diverged)
 
 
-def _score_update(state: KappaState, sigs, cfg: KappaConfig
-                  ) -> Tuple[KappaState, jnp.ndarray]:
+def _score_update(state: KappaState, sigs, cfg: KappaConfig,
+                  mask=None) -> Tuple[KappaState, jnp.ndarray]:
     """One gating-phase scoring step (Alg. 2 lines 13–21).
-    Returns (state, trajectory scores)."""
+    Returns (state, trajectory scores). ``mask`` (default ``state.alive``)
+    is the z-score population — the finite-guard narrows it so poisoned
+    rows can't sit in sibling branches' normalization statistics."""
     kl, conf, ent = sigs
+    if mask is None:
+        mask = state.alive
     first = state.ema_steps == 0
     d_prev = jnp.where(first, jnp.zeros_like(kl), state.prev_kl)  # D_{c-1} ≡ 0
     di = kl - d_prev
@@ -102,9 +106,9 @@ def _score_update(state: KappaState, sigs, cfg: KappaConfig
     ema_steps = state.ema_steps + 1
     ema_hat = robust.ema_debias(ema_raw, ema_steps, cfg.ema_rate)
 
-    z_ema = scoring.masked_zscore(ema_hat, state.alive, cfg.zscore_clip)
-    z_conf = scoring.masked_zscore(conf, state.alive, cfg.zscore_clip)
-    z_ent = scoring.masked_zscore(ent, state.alive, cfg.zscore_clip)
+    z_ema = scoring.masked_zscore(ema_hat, mask, cfg.zscore_clip)
+    z_conf = scoring.masked_zscore(conf, mask, cfg.zscore_clip)
+    z_ent = scoring.masked_zscore(ent, mask, cfg.zscore_clip)
     s = scoring.aggregate(z_ema, z_conf, z_ent, cfg.w_kl, cfg.w_conf, cfg.w_ent)
 
     num, den, traj = scoring.trajectory_update(
@@ -140,6 +144,18 @@ def kappa_step(state: KappaState, logits, tokens, log_q, cfg: KappaConfig
     state = _update_divergence(state, tokens)
     sigs = signals.compute_signals(logits, log_q)
 
+    # --- finite-guard: a branch whose logits went NaN/Inf (device fault,
+    # injected or real) must not poison its siblings. Its signals are
+    # zeroed BEFORE any reduction (masked_zscore sums x*mask, and
+    # NaN * 0 = NaN — masking alone is not enough), it is dropped from
+    # the z-score population, and it is killed below. All three moves
+    # are bitwise no-ops when every branch is finite.
+    finite_ok = jnp.all(jnp.isfinite(logits), axis=-1)
+    kl_s, conf_s, ent_s = sigs
+    sigs = (jnp.where(finite_ok, kl_s, 0.0),
+            jnp.where(finite_ok, conf_s, 0.0),
+            jnp.where(finite_ok, ent_s, 0.0))
+
     # --- draft→gating transition (adaptive cutoff à la ST-BoN)
     if cfg.adaptive_cutoff:
         hit = _all_pairwise_diverged(state) | (state.step >= cfg.max_cutoff)
@@ -155,7 +171,7 @@ def kappa_step(state: KappaState, logits, tokens, log_q, cfg: KappaConfig
     horizon_dyn = state.horizon_dyn
     if cfg.adaptive_horizon:
         _, _, ent = sigs
-        aw = state.alive.astype(jnp.float32)
+        aw = (state.alive & finite_ok).astype(jnp.float32)
         h_mean = jnp.sum(ent * aw) / jnp.maximum(jnp.sum(aw), 1.0)
         h_norm = jnp.clip(h_mean / jnp.log(jnp.float32(logits.shape[-1])), 0.0, 1.0)
         tau = jnp.round(cfg.horizon * (1.0 + cfg.horizon_beta * (2.0 * h_norm - 1.0)))
@@ -165,7 +181,8 @@ def kappa_step(state: KappaState, logits, tokens, log_q, cfg: KappaConfig
                            horizon_dyn=horizon_dyn)
 
     # --- gating-phase scoring + pruning (masked when not in gating)
-    scored, traj = _score_update(state, sigs, cfg)
+    scored, traj = _score_update(state, sigs, cfg,
+                                 mask=state.alive & finite_ok)
     gate_rel = jnp.clip(state.step - cutoff, 0, horizon_dyn)
     r_target = schedule.survivors(cfg.schedule, cfg.num_branches,
                                   gate_rel, horizon_dyn)
@@ -175,6 +192,12 @@ def kappa_step(state: KappaState, logits, tokens, log_q, cfg: KappaConfig
     out = jax.tree.map(
         lambda a, b: jnp.where(in_gating, a, b), scored, state)
     alive = jnp.where(active_gate, new_alive, state.alive)
+    # finite-guard kill: a poisoned branch dies in every phase (draft
+    # included) — unless EVERY alive branch is poisoned, in which case
+    # leaving the mask untouched keeps the state machine well-formed
+    # (the serving scheduler detects that case and replays the request).
+    guarded = alive & finite_ok
+    alive = jnp.where(jnp.any(guarded), guarded, alive)
     return out._replace(alive=alive, step=state.step + 1,
                         cutoff=cutoff, in_gating=in_gating,
                         diverged=state.diverged, horizon_dyn=horizon_dyn)

@@ -24,6 +24,7 @@ from repro.data import tokenizer as tok
 from repro.models import init_params
 from repro.models.frontends import stub_frontend
 from repro.serving import engine
+from repro.serving import faults as faults_lib
 from repro.serving import strategies
 from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 from repro.training import checkpoint
@@ -54,7 +55,10 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                paged: bool = False, page_size: int = 64,
                num_pages: int | None = None,
                prefill_chunk: int | None = None,
-               prefix_cache: bool = False) -> dict:
+               prefix_cache: bool = False,
+               inject_faults: str | None = None,
+               max_queue: int | None = None,
+               deadline_s: float | None = None) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -79,17 +83,21 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         n_prefix = engine._n_prefix(cfg)
         max_seq = max(len(p.prompt) for p in test) + max_new + n_prefix
         fan_out = factory().rows(kcfg)
+        plan = (faults_lib.parse_fault_spec(inject_faults)
+                if inject_faults else None)
         sched_kw = dict(rows=sched_rows or 2 * fan_out, max_seq=max_seq,
                         method=method, eos_id=tok.EOS, bos_id=tok.BOS,
                         frontend=fe, strategy_factory=factory,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, faults=plan,
+                        max_queue=max_queue)
         if paged:
             sched = PagedScheduler(params, cfg, kcfg, page_size=page_size,
                                    num_pages=num_pages,
                                    prefix_cache=prefix_cache, **sched_kw)
         else:
             sched = ContinuousBatchingScheduler(params, cfg, kcfg, **sched_kw)
-        rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i))
+        rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i),
+                             deadline_s=deadline_s)
                 for i, prob in enumerate(test)]
         res = sched.run()
         gens = [res[rid] for rid in rids]
@@ -127,6 +135,13 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
             "requests_per_s": tp["requests_per_s"],
             "row_utilization": tp["row_utilization"],
             "ticks": tp["ticks"],
+            "status_counts": tp["status_counts"],
+            "retries": tp["retries"],
+            "failures": tp["failures"],
+            "timeouts": tp["timeouts"],
+            "shed": tp["shed"],
+            "cancelled": tp["cancelled"],
+            "faults_injected": tp["faults_injected"],
         })
         out["ttft_p99_s"] = tp["ttft_p99_s"]
         out["itl_p99_s"] = tp["itl_p99_s"]
@@ -153,6 +168,31 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                      f"evict={out['prefix_evictions']} "
                      f"pinned={out['prefix_pinned_pages']}")
         print(line)
+        if scheduler:
+            # per-terminal-status summary — every submission lands in
+            # exactly one of these buckets (DESIGN.md §8)
+            sc = out["status_counts"]
+            print("  status: "
+                  + " ".join(f"{k}={sc.get(k, 0)}" for k in
+                             ("OK", "CANCELLED", "TIMEOUT", "FAILED",
+                              "SHED"))
+                  + f" | retries={out['retries']} "
+                    f"faults_injected={out['faults_injected']}")
+    if scheduler and inject_faults:
+        # chaos-smoke contract (CI): faults actually fired, the run
+        # survived, and nothing leaked — pages all free, no pins left
+        assert out["faults_injected"] > 0, \
+            "fault plan injected nothing — raise its probabilities"
+        assert out["retries"] > 0, "no fault-triggered retries recorded"
+        if paged:
+            if sched.pcache is not None:
+                sched.pcache.drop()
+            assert sched.alloc.free_count == sched.num_pages, \
+                f"leaked pages: {sched.num_pages - sched.alloc.free_count}"
+            assert int(sched.alloc.pinned.sum()) == 0, "leaked pins"
+        if verbose:
+            print("  chaos smoke: zero leaked pages/pins, "
+                  f"{out['retries']} retries survived")
     return out
 
 
@@ -185,13 +225,26 @@ def main(argv=None):
                          "many prompt tokens per tick interleaved with "
                          "decode instead of one blocking whole-prompt "
                          "prefill (scheduler paths only)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="seeded fault injection for chaos smoke runs, "
+                         "e.g. 'seed:7' or 'seed:7,step:0.1,alloc:0.2' "
+                         "(scheduler paths only); asserts zero leaked "
+                         "pages/pins and nonzero retries on completion")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue: submissions beyond "
+                         "this depth are shed with a SHED result")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline; expired "
+                         "requests truncate to a TIMEOUT result")
     args = ap.parse_args(argv)
     serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
                ckpt=args.ckpt, max_new=args.max_new,
                scheduler=args.scheduler or args.paged, sched_rows=args.rows,
                paged=args.paged, page_size=args.page_size,
                num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
-               prefix_cache=args.prefix_cache)
+               prefix_cache=args.prefix_cache,
+               inject_faults=args.inject_faults, max_queue=args.max_queue,
+               deadline_s=args.deadline_s)
 
 
 if __name__ == "__main__":

@@ -179,7 +179,7 @@ class PageAllocator:
     function of the alloc/free history."""
 
     def __init__(self, num_pages: int, page_size: int, rows: int,
-                 max_pages: int):
+                 max_pages: int, fault_plan=None):
         if num_pages < 1:
             raise ValueError("need at least one allocatable page")
         self.num_pages = num_pages
@@ -195,6 +195,19 @@ class PageAllocator:
         # ordinary ``ref`` plus this attribution mark, so the invariant
         # checkers can split refcounts into table refs + pins)
         self.pinned = np.zeros((num_pages,), np.int32)
+        # fault injection: ``holdback`` free pages are embargoed for the
+        # current tick — ``can_alloc`` (and hence admission/eviction
+        # decisions) see a smaller heap, but the raw ``free_count``
+        # accounting is untouched so leak checks stay exact.
+        self.fault_plan = fault_plan
+        self.holdback = 0
+
+    def begin_tick(self, tick: int) -> int:
+        """Consult the fault plan for this tick's allocator-exhaustion
+        embargo; returns the holdback so callers can count injections."""
+        self.holdback = (self.fault_plan.page_holdback(tick)
+                         if self.fault_plan is not None else 0)
+        return self.holdback
 
     # ------------------------------------------------------------ queries
 
@@ -210,8 +223,13 @@ class PageAllocator:
     def used_count(self) -> int:
         return self.num_pages - len(self.free_pages)
 
+    @property
+    def avail_count(self) -> int:
+        """Pages actually allocatable this tick (free minus embargo)."""
+        return max(0, len(self.free_pages) - self.holdback)
+
     def can_alloc(self, n_pages: int) -> bool:
-        return len(self.free_pages) >= n_pages
+        return self.avail_count >= n_pages
 
     def row_pages(self, row: int) -> np.ndarray:
         """Physical pages referenced by ``row``'s block table."""
@@ -225,7 +243,9 @@ class PageAllocator:
         :meth:`set_row_pages`."""
         if not self.can_alloc(n_pages):
             raise ValueError(f"out of pages: need {n_pages}, "
-                             f"free {len(self.free_pages)}")
+                             f"free {len(self.free_pages)}"
+                             + (f" (holdback {self.holdback})"
+                                if self.holdback else ""))
         return [heapq.heappop(self.free_pages) for _ in range(n_pages)]
 
     def set_row_pages(self, row: int, pages: Sequence[int]) -> None:

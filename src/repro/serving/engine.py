@@ -36,9 +36,28 @@ from repro.configs.base import KappaConfig, ModelConfig
 from repro.core import kappa as kappa_lib
 from repro.models import decode_step, init_cache, prefill, prefill_chunk
 from repro.serving import cache as cache_lib
+from repro.serving import faults as faults_lib
 from repro.serving import sampler
 from repro.serving import strategies
 from repro.serving.strategies import GenResult  # noqa: F401  (public API)
+
+
+def check_step_fault(plan, tick: int) -> None:
+    """Raise :class:`repro.serving.faults.InjectedStepFault` if ``plan``
+    schedules a device-step failure for ``tick``. Called at the very top
+    of the fused decode dispatch, before any pool mutation — the donated
+    buffers are never consumed, so a retry replays on intact state."""
+    if plan is not None and plan.step_fault(tick):
+        raise faults_lib.InjectedStepFault(
+            f"injected device-step fault at tick {tick}")
+
+
+@jax.jit
+def rows_finite(logits):
+    """(rows,) bool — which pool rows produced all-finite logits. Fused
+    into the tick's existing blocking transfer so NaN detection costs no
+    extra device sync."""
+    return jnp.all(jnp.isfinite(logits), axis=-1)
 
 
 # ------------------------------------------------------------ shared bits

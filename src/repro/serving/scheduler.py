@@ -67,6 +67,17 @@ logic is shared verbatim with the engine loop — so with the same
 per-request keys and the same ``max_seq`` both schedulers reproduce the
 sequential engine token for token (tests/test_scheduler.py,
 tests/test_paged.py).
+
+Request lifecycle (DESIGN.md §8): every submission reaches exactly one
+terminal status — ``OK`` (normal completion), ``CANCELLED``
+(:meth:`cancel` from any state, partial tokens returned), ``TIMEOUT``
+(per-request ``deadline_s`` / ``max_wall_ticks`` watchdog,
+truncate-and-return), ``FAILED`` (quarantined after ``max_retries``
+fault-triggered replays), or ``SHED`` (bounded admission queue
+overflowed at submit time). Injected faults (``serving.faults``) are
+answered with the preemption-replay machinery: tear down, requeue with
+exponential backoff, replay token-for-token from the original
+submission RNG.
 """
 from __future__ import annotations
 
@@ -83,9 +94,18 @@ from repro.configs.base import KappaConfig, ModelConfig
 from repro.models import decode_step, init_cache, init_paged_cache
 from repro.serving import cache as cache_lib
 from repro.serving import engine
+from repro.serving import faults as faults_lib
 from repro.serving import sampler
 from repro.serving import strategies
 from repro.serving.strategies import GenResult
+
+
+class Unservable(ValueError):
+    """Raised at ``submit()`` time for a request this scheduler can NEVER
+    serve (too many positions, too much fan-out, worst-case pages beyond
+    the whole pool) — as opposed to transient pressure, which queues.
+    Subclasses ValueError so callers that guarded the old assertions
+    keep working."""
 
 _scatter = jax.jit(cache_lib.scatter_batch_prefix, donate_argnums=(0,))
 _install_shared = jax.jit(cache_lib.install_paged_shared,
@@ -107,6 +127,11 @@ class _Queued:
     fan_out: int
     factory: Callable[[], strategies.DecodeStrategy]  # per-request strategy
     bypasses: int = 0          # times a younger request was admitted first
+    deadline_s: Optional[float] = None   # wall-clock budget from submit
+    max_wall_ticks: Optional[int] = None  # tick budget from submit
+    n_retries: int = 0         # fault-triggered replays so far
+    not_before: int = 0        # backoff: earliest tick for re-admission
+    submit_tick: int = 0       # tick at submission (max_wall_ticks base)
 
 
 @dataclasses.dataclass
@@ -131,7 +156,10 @@ class _SchedulerBase:
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory: Optional[Callable[[], strategies.DecodeStrategy]] = None,
                  fused_sampling: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 faults: Optional[faults_lib.FaultPlan] = None,
+                 max_retries: int = 3, retry_backoff: int = 2,
+                 max_queue: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.kcfg = kcfg
@@ -196,7 +224,17 @@ class _SchedulerBase:
         self.counters: Dict[str, int] = {
             "controller_dispatches": 0, "controller_syncs": 0,
             "sampler_dispatches": 0, "host_syncs": 0, "preemptions": 0,
+            "retries": 0, "failures": 0, "cancelled": 0, "timeouts": 0,
+            "shed": 0, "faults_injected": 0,
         }
+        # request-lifecycle hardening (DESIGN.md §8): fault plan, bounded
+        # retry-with-backoff, and the bounded admission queue
+        self.faults = faults
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.max_queue = max_queue
+        self._fault_tick = False     # an alloc embargo is live this tick
+        self._has_deadlines = False  # sticky: any submit set a deadline
         # per-tick wall-time breakdown (seconds, cumulative over run)
         self.tick_time: Dict[str, float] = {
             "model": 0.0, "prefill": 0.0, "sampler": 0.0,
@@ -232,6 +270,23 @@ class _SchedulerBase:
 
     def _release_storage(self, slots: List[int]) -> None:
         """Return the slots' KV reservation (pages / nothing extra)."""
+
+    def _publish_prompt_pages(self, prompt: np.ndarray, slot: int,
+                              upto: int) -> None:
+        """Teardown hook, called BEFORE a departing (preempted /
+        cancelled / timed-out) request's storage is released: backends
+        may retain its fully-written prompt extent (the paged backend
+        pins it into the radix prefix cache). Base: nothing to retain."""
+
+    def _begin_fault_tick(self) -> bool:
+        """Consult the fault plan for tick-scoped allocator faults; True
+        while an embargo is live (preemptions this tick are charged to
+        the victim's retry budget). Base: no allocator, nothing to do."""
+        return False
+
+    def _end_run(self) -> None:
+        """Post-run hook: clear any tick-scoped fault state so leak
+        checks and later manual ticks see a clean pool."""
 
     def _decode_tick(self):
         """One fused model step over the pool; returns pool logits."""
@@ -277,34 +332,206 @@ class _SchedulerBase:
                max_new: Optional[int] = None,
                method: Optional[str] = None,
                strategy_factory: Optional[Callable[
-                   [], strategies.DecodeStrategy]] = None) -> int:
+                   [], strategies.DecodeStrategy]] = None,
+               deadline_s: Optional[float] = None,
+               max_wall_ticks: Optional[int] = None) -> int:
         """Queue one prompt with its own RNG stream; returns request id.
         ``max_new`` overrides ``kcfg.max_new_tokens`` for this request
         (mixed-length serving — the paged pool sizes its reservation to
         the request's own need). ``method`` / ``strategy_factory``
         override the scheduler-level strategy for this request, so one
-        pool can serve mixed kappa/bon/greedy/stbon traffic."""
+        pool can serve mixed kappa/bon/greedy/stbon traffic.
+
+        ``deadline_s`` (wall-clock seconds from submission) and
+        ``max_wall_ticks`` (scheduler ticks from submission — the
+        deterministic twin for tests) bound the request's lifetime: the
+        watchdog truncates it to a TIMEOUT result instead of raising.
+        Raises :class:`Unservable` for a request no amount of waiting
+        can serve; a full bounded queue (``max_queue``) sheds the
+        request immediately with a SHED result instead."""
         kcfg = self.kcfg if max_new is None else dataclasses.replace(
             self.kcfg, max_new_tokens=max_new)
         need = len(prompt) + self.n_prefix + kcfg.max_new_tokens
         if need > self.max_seq:
-            raise ValueError(
+            raise Unservable(
                 f"prompt needs {need} positions > pool max_seq={self.max_seq}")
         if strategy_factory is None:
             strategy_factory = (self.strategy_factory if method is None
                                 else lambda: strategies.make_strategy(method))
         fan_out = strategy_factory().rows(kcfg)
         if fan_out > self.rows:
-            raise ValueError(
+            raise Unservable(
                 f"request fan-out {fan_out} > pool rows={self.rows}")
         rid = self._next_rid
         self._next_rid += 1
         item = _Queued(rid, np.asarray(prompt), rng, kcfg, need, fan_out,
-                       strategy_factory)
+                       strategy_factory, deadline_s=deadline_s,
+                       max_wall_ticks=max_wall_ticks,
+                       submit_tick=self.ticks)
         self._check_servable(item)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # graceful overload degradation: reject at the door with a
+            # terminal SHED result rather than queueing into certain
+            # deadline misses (the admitted requests' ITL is protected)
+            self.counters["shed"] += 1
+            self.results[rid] = self._empty_result(item, "SHED")
+            return rid
+        if deadline_s is not None or max_wall_ticks is not None:
+            self._has_deadlines = True
         self._submit_t.setdefault(rid, time.perf_counter())
         self.queue.append(item)
         return rid
+
+    # ------------------------------------------------- request lifecycle
+
+    def _empty_result(self, item: _Queued, status: str) -> GenResult:
+        """Terminal result for a request that returns no tokens (shed,
+        cancelled while queued, timed out while queued, quarantined)."""
+        n = item.fan_out
+        return GenResult(
+            tokens=[], chosen_branch=-1,
+            all_tokens=np.full((n, 1), -1, np.int32),
+            lengths=np.zeros((n,), np.int64),
+            logical_tokens=0, compute_tokens=0, peak_cache_bytes=0,
+            steps=0, status=status, n_retries=item.n_retries)
+
+    def _finalize(self, rid: int, status: str) -> GenResult:
+        """Terminal teardown for an ADMITTED request (mid-PREFILLING or
+        mid-decode): emit its result under ``status`` and release every
+        resource, in the completion path's exact order — result() reads
+        the pooled controller mirrors, the prefix publication adopts
+        live page refs, and only then do the pool slot and pages go
+        away. An active request returns its partial tokens; a
+        PREFILLING one has produced none yet."""
+        item = self._items.pop(rid)
+        self._admit_seq.pop(rid, None)
+        if rid in self.prefilling:
+            pf = self.prefilling.pop(rid)
+            self._publish_prompt_pages(item.prompt, pf.slots[0], pf.filled)
+            self._release(pf.slots)
+            res = self._empty_result(item, status)
+        else:
+            rs, slots = self.active.pop(rid)
+            self._slots_dev.pop(rid, None)
+            res = rs.result()            # BEFORE release_pool (mirrors)
+            res.status = status
+            res.n_retries = item.n_retries
+            self._publish_prefix(item, rs, slots)
+            rs.strategy.release_pool()
+            self._release(slots)
+        self.results[rid] = res
+        return res
+
+    def _requeue(self, rid: int) -> _Queued:
+        """Non-terminal teardown: free an admitted request's rows (and
+        storage) and hand back its original submission for replay. The
+        paged backend pins the fully-written prompt extent into the
+        prefix cache first, so the replay aliases it back as a hit. The
+        replay decodes from the original submission RNG stream —
+        token-for-token identical to a never-disturbed run."""
+        if rid in self.prefilling:
+            pf = self.prefilling.pop(rid)
+            self._publish_prompt_pages(pf.item.prompt, pf.slots[0],
+                                       pf.filled)
+            self._release(pf.slots)
+        else:
+            rs, slots = self.active.pop(rid)
+            self._slots_dev.pop(rid, None)
+            item = self._items[rid]
+            self._publish_prompt_pages(item.prompt, slots[0],
+                                       len(item.prompt))
+            rs.strategy.release_pool()
+            self._release(slots)
+        self._admit_seq.pop(rid, None)
+        # latency stamps restart with the replay
+        self.ttft.pop(rid, None)
+        self.token_times.pop(rid, None)
+        return self._items.pop(rid)
+
+    def _retry_or_quarantine(self, item: _Queued) -> None:
+        """Requeue a fault-hit request for replay with exponential
+        backoff; after ``max_retries`` replays quarantine it as FAILED
+        (post-fault partial state is suspect, so no tokens are
+        returned) instead of letting one poisoned request grind the
+        pool forever."""
+        if item.n_retries >= self.max_retries:
+            self.counters["failures"] += 1
+            self.results[item.rid] = self._empty_result(item, "FAILED")
+            return
+        item.n_retries += 1
+        self.counters["retries"] += 1
+        item.not_before = self.ticks \
+            + self.retry_backoff * 2 ** (item.n_retries - 1)
+        self.queue.appendleft(item)
+
+    def _youngest_started(self) -> int:
+        """Youngest-admitted request holding pool resources — decoding
+        OR still PREFILLING (a half-written prefill is the cheapest
+        thing to evict: no decoded tokens are thrown away)."""
+        cands = list(self.active) + list(self.prefilling)
+        return max(cands, key=lambda r: self._admit_seq[r])
+
+    def _recover_step_fault(self) -> None:
+        """A device-step fault aborted the tick before any pool or
+        allocator mutation (the injection point is ahead of page growth
+        and the dispatch, and the donated buffers were never consumed).
+        Tear down ONE victim — youngest-started, matching the
+        preemption policy — and route it through the retry budget;
+        everyone else simply retries the tick."""
+        victim = self._youngest_started()
+        self._retry_or_quarantine(self._requeue(victim))
+
+    def _watchdog(self) -> None:
+        """Deadline enforcement at tick entry: expire requests past
+        their wall-clock deadline or tick budget. Truncate-and-return —
+        an expired active request keeps the tokens it already has."""
+        if not self._has_deadlines:
+            return
+        now = time.perf_counter()
+
+        def expired(item: _Queued) -> bool:
+            if item.max_wall_ticks is not None \
+                    and self.ticks - item.submit_tick >= item.max_wall_ticks:
+                return True
+            return item.deadline_s is not None \
+                and now - self._submit_t[item.rid] >= item.deadline_s
+
+        for rid in [r for r in list(self.active) + list(self.prefilling)
+                    if expired(self._items[r])]:
+            self._finalize(rid, "TIMEOUT")
+            self.counters["timeouts"] += 1
+        if any(expired(i) for i in self.queue):
+            keep: deque = deque()
+            for item in self.queue:
+                if expired(item):
+                    self.results[item.rid] = self._empty_result(
+                        item, "TIMEOUT")
+                    self.counters["timeouts"] += 1
+                else:
+                    keep.append(item)
+            self.queue = keep
+
+    def cancel(self, rid: int) -> GenResult:
+        """Tear down ``rid`` wherever it is in its lifecycle: a queued
+        request is removed outright, a PREFILLING or active one is
+        finalized with its resources released (rows, pages, pooled
+        controller slot) under the publish-before-release protocol.
+        Returns the terminal result — partial tokens if the request was
+        mid-decode. Idempotent once terminal; unknown rids raise
+        KeyError."""
+        if rid in self.results:
+            return self.results[rid]
+        if rid in self.active or rid in self.prefilling:
+            self.counters["cancelled"] += 1
+            return self._finalize(rid, "CANCELLED")
+        for i, item in enumerate(self.queue):
+            if item.rid == rid:
+                del self.queue[i]
+                self.counters["cancelled"] += 1
+                res = self._empty_result(item, "CANCELLED")
+                self.results[rid] = res
+                return res
+        raise KeyError(f"unknown request id {rid}")
 
     # --------------------------------------------------------- admission
 
@@ -360,7 +587,9 @@ class _SchedulerBase:
         self.ttft[item.rid] = now - self._submit_t[item.rid]
         self.token_times[item.rid] = [now]
         if rs.finished:  # e.g. greedy whose first token is already EOS
-            self.results[item.rid] = rs.result()
+            res = rs.result()
+            res.n_retries = item.n_retries
+            self.results[item.rid] = res
             self._publish_prefix(item, rs, slots)
             rs.strategy.release_pool()
             self._release(slots)
@@ -485,11 +714,18 @@ class _SchedulerBase:
         rows (pure host work). Decode rows therefore never wait for a
         whole admission prefill — at most one chunk of it runs inside
         their tick."""
+        self._watchdog()
+        self._fault_tick = self._begin_fault_tick()
         while self._admit_one():
             pass
         self._advance_prefills()
         if not self.active:
-            progressed = bool(self.prefilling)
+            # pure-backoff and embargo-blocked ticks still count as
+            # progress: the tick index must advance for `not_before`
+            # stamps to expire and for the next tick's fault draw
+            progressed = bool(self.prefilling) \
+                or any(i.not_before > self.ticks for i in self.queue) \
+                or (self._fault_tick and bool(self.queue))
             if self._fused_rids:
                 # the decode dispatch these chunks were to ride vanished
                 # (a sibling's page growth preempted the whole pool) —
@@ -508,11 +744,31 @@ class _SchedulerBase:
         self._occupied_ticks += self.rows - len(self.free)
 
         t0 = time.perf_counter()
-        logits = self._decode_tick()
+        try:
+            logits = self._decode_tick()
+        except faults_lib.InjectedStepFault:
+            # the injection point is BEFORE any pool/allocator mutation,
+            # so the tick simply didn't happen: tear one victim down
+            # through the retry budget and let everyone else retry
+            self.counters["faults_injected"] += 1
+            self._recover_step_fault()
+            self.tick_time["model"] += time.perf_counter() - t0
+            self.ticks += 1
+            return
+        finite_dev = None
+        if self.faults is not None:
+            bad = self.faults.nan_rows_for(self.ticks, self.rows)
+            if bad.size:
+                self.counters["faults_injected"] += 1
+                logits = logits.at[jnp.asarray(bad)].set(jnp.nan)
+            # detection is device-side (a fused finite-mask riding the
+            # tick's blocking transfer), not host knowledge of `bad` —
+            # the same path a real numerics blowup would take
+            finite_dev = engine.rows_finite(logits)
         t1 = time.perf_counter()
         self.tick_time["model"] += t1 - t0
 
-        toks = picked = None
+        toks = picked = finite = None
         if self.fused_sampling:
             # one fused per-row-keyed sampling dispatch for the whole
             # pool; free rows ride along as masked argmax (ignored)
@@ -547,15 +803,29 @@ class _SchedulerBase:
             # ONE blocking transfer for sampled tokens, picked log-probs
             # AND all pooled controller outputs (alive/traj/cutoff of
             # every kappa request), independent of active-request count
-            out, ctrl_host = jax.device_get((out_dev, ctrl_dev))
+            out, ctrl_host, finite = jax.device_get(
+                (out_dev, ctrl_dev, finite_dev))
             self.counters["host_syncs"] += 1
             if ctrl_host is not None:
                 self.counters["controller_syncs"] += 1
                 self._kappa_pool.publish(ctrl_host)
             toks, picked = out if want_lp else (out, None)
             self.tick_time["sync"] += time.perf_counter() - t3
+        elif finite_dev is not None:
+            finite = jax.device_get(finite_dev)
 
         t4 = time.perf_counter()
+        if finite is not None and not bool(np.all(finite)):
+            # NaN-poisoned rows: tear the owning requests down BEFORE
+            # the advance loop, so poisoned tokens never reach a token
+            # log or a result. The pooled controller consumed the
+            # poison for one dispatch, but its finite-guard
+            # (core/kappa.py) kept it out of sibling branches' scores,
+            # the victim's slot is reset on re-acquire, and other slots
+            # are untouched (vmap independence).
+            for rid in [r for r, (_, s) in list(self.active.items())
+                        if not bool(np.all(finite[s]))]:
+                self._retry_or_quarantine(self._requeue(rid))
         stamped = list(self.active)
         for rid in list(self.active):
             rs, slots = self.active[rid]
@@ -581,17 +851,10 @@ class _SchedulerBase:
             self.row_token[slots] = rs.cur
             self.row_pos[slots] = rs.pos
             if rs.finished:
-                self.results[rid] = rs.result()
-                del self.active[rid]
-                self._slots_dev.pop(rid, None)
-                item = self._items.pop(rid, None)
-                self._admit_seq.pop(rid, None)
-                # publish BEFORE the pool slot / pages go away: the
-                # radix pin must adopt live refs, and kappa's winner
+                # publish-before-release ordering lives in _finalize:
+                # the radix pin must adopt live refs, and kappa's winner
                 # check reads the pooled controller mirrors
-                self._publish_prefix(item, rs, slots)
-                rs.strategy.release_pool()
-                self._release(slots)
+                self._finalize(rid, "OK")
         self._post_tick_prefill()
         now = time.perf_counter()
         for rid in stamped:
@@ -613,12 +876,25 @@ class _SchedulerBase:
 
         while self.queue or self.active or self.prefilling:
             before = state()
+            pre = self.ticks
             self.tick()
             if not self.active and not self.prefilling and self.queue \
                     and state() == before:
+                # compare backoff stamps against the PRE-tick counter: an
+                # item whose not_before equals the new tick index was
+                # still backing off during the tick that just ran and
+                # deserves one more tick to be admitted. When the tick
+                # made no progress (counter unchanged) pre == self.ticks
+                # and this degenerates to the strict stall check.
+                if self._fault_tick \
+                        or any(i.not_before > pre
+                               for i in self.queue):
+                    continue   # backoff / embargo, not a stall: the
+                    #              tick advanced, the next one re-draws
                 raise RuntimeError(
                     "scheduler stalled: queued request cannot be admitted "
                     f"(free={len(self.free)} rows)")
+        self._end_run()
         self.elapsed = time.time() - t0
         return dict(sorted(self.results.items()))
 
@@ -654,6 +930,10 @@ class _SchedulerBase:
         for k, v in self.tick_time.items():
             out[f"time_{k}_s"] = v
         out.update(self.counters)
+        status_counts: Dict[str, int] = {}
+        for r in self.results.values():
+            status_counts[r.status] = status_counts.get(r.status, 0) + 1
+        out["status_counts"] = status_counts
         out["admit_peak_bytes"] = self.admit_peak_bytes
         out.update(self.latency_stats())
         return out
@@ -697,21 +977,30 @@ class ContinuousBatchingScheduler(_SchedulerBase):
                  rows: int, max_seq: int, method: str = "kappa",
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory=None, fused_sampling: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 faults: Optional[faults_lib.FaultPlan] = None,
+                 max_retries: int = 3, retry_backoff: int = 2,
+                 max_queue: Optional[int] = None):
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,
                          fused_sampling=fused_sampling,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk, faults=faults,
+                         max_retries=max_retries, retry_backoff=retry_backoff,
+                         max_queue=max_queue)
         self.pool = init_cache(cfg, rows, max_seq)
 
     def _admissible(self, item: _Queued) -> bool:
         return len(self.free) >= item.fan_out
 
     def _select_admit(self) -> Optional[int]:
-        # FIFO: admit the head or nothing
-        if self.queue and self._admissible(self.queue[0]):
-            return 0
+        # FIFO among READY items: admit the first one not backing off,
+        # or nothing — head-or-nothing, so ready requests keep FIFO
+        # completion order while a retry waits out its backoff
+        for i, item in enumerate(self.queue):
+            if item.not_before > self.ticks:
+                continue
+            return i if self._admissible(item) else None
         return None
 
     def _install(self, slots, item, sub1) -> None:
@@ -745,6 +1034,7 @@ class ContinuousBatchingScheduler(_SchedulerBase):
         return True
 
     def _decode_tick(self):
+        engine.check_step_fault(self.faults, self.ticks)
         logits, self.pool = engine._model_step(
             self.params, self.cfg, jnp.asarray(self.row_token),
             jnp.asarray(self.row_pos), self.pool)
@@ -806,20 +1096,26 @@ class PagedScheduler(_SchedulerBase):
                  eos_id: int, bos_id: int = 0, frontend=None,
                  strategy_factory=None, fused_sampling: bool = True,
                  max_bypass: int = 4, prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 faults: Optional[faults_lib.FaultPlan] = None,
+                 max_retries: int = 3, retry_backoff: int = 2,
+                 max_queue: Optional[int] = None):
         max_seq = -(-max_seq // page_size) * page_size
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,
                          fused_sampling=fused_sampling,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk, faults=faults,
+                         max_retries=max_retries, retry_backoff=retry_backoff,
+                         max_queue=max_queue)
         self.page_size = page_size
         self.max_pages = max_seq // page_size
         self.num_pages = num_pages if num_pages is not None \
             else rows * self.max_pages
         self.max_bypass = max_bypass
         self.alloc = cache_lib.PageAllocator(self.num_pages, page_size,
-                                             rows, self.max_pages)
+                                             rows, self.max_pages,
+                                             fault_plan=self.faults)
         self.pool = init_paged_cache(cfg, rows, self.num_pages, page_size,
                                      max_seq)
         # radix prefix cache: only sound when every layer's KV is page-
@@ -893,7 +1189,7 @@ class PagedScheduler(_SchedulerBase):
         # preemption always unblocks growth (see _ensure_pages)
         total = self._worst_pages(item)
         if total > self.num_pages:
-            raise ValueError(
+            raise Unservable(
                 f"request needs {total} pages > pool num_pages="
                 f"{self.num_pages} (page_size={self.page_size})")
 
@@ -901,24 +1197,32 @@ class PagedScheduler(_SchedulerBase):
         # pin-only cached pages count as free capacity: admission may
         # rely on eviction (see _reclaim) — without this slack a pool
         # whose free heap is all pinned prefixes would refuse every
-        # admission and stall run() with nothing active to preempt
+        # admission and stall run() with nothing active to preempt.
+        # avail_count (not free_count): an injected allocator embargo
+        # must gate admission and growth consistently within the tick
         slack = self.pcache.evictable_count if self.pcache is not None else 0
         return (len(self.free) >= item.fan_out
-                and self.alloc.free_count + slack
+                and self.alloc.avail_count + slack
                 >= self._initial_pages(item))
 
     def _select_admit(self) -> Optional[int]:
         # shortest-job-first among fitting requests, FIFO tie-break —
         # with bounded bypass so a steady short stream cannot starve the
         # oldest request: after max_bypass bypasses the head is admitted
-        # next-fit-or-nothing (admission pauses until it fits)
+        # next-fit-or-nothing (admission pauses until it fits). Items
+        # backing off after a fault retry are skipped until their
+        # not_before tick; the aged head keeps its fast path only once
+        # it is ready itself.
         if not self.queue:
             return None
         head = self.queue[0]
-        if head.bypasses >= self.max_bypass:
+        if head.not_before <= self.ticks \
+                and head.bypasses >= self.max_bypass:
             return 0 if self._admissible(head) else None
         best, best_need = None, None
         for i, item in enumerate(self.queue):
+            if item.not_before > self.ticks:
+                continue
             if self._admissible(item) and (best is None
                                            or item.need < best_need):
                 best, best_need = i, item.need
@@ -956,12 +1260,14 @@ class PagedScheduler(_SchedulerBase):
 
     # ------------------------------------------- lazy growth / preemption
 
-    def _youngest_started(self) -> int:
-        """Youngest-admitted request holding pool resources — decoding
-        OR still PREFILLING (a half-written prefill is the cheapest
-        thing to evict: no decoded tokens are thrown away)."""
-        cands = list(self.active) + list(self.prefilling)
-        return max(cands, key=lambda r: self._admit_seq[r])
+    def _begin_fault_tick(self) -> bool:
+        hb = self.alloc.begin_tick(self.ticks)
+        if hb:
+            self.counters["faults_injected"] += 1
+        return hb > 0
+
+    def _end_run(self) -> None:
+        self.alloc.holdback = 0
 
     def _publish_prompt_pages(self, prompt: np.ndarray, slot: int,
                               upto: int) -> None:
@@ -980,31 +1286,20 @@ class PagedScheduler(_SchedulerBase):
 
     def _preempt(self, rid: int) -> None:
         """Evict ``rid`` (active or mid-PREFILLING): free its pages and
-        rows, return its original submission to the queue head. On
-        re-admission it replays prefill and decode from its original RNG
-        stream, so the final tokens are identical to a never-preempted
-        run. Fully-written prompt pages are published into the prefix
-        cache first (instead of freed) — the replay then aliases them
-        back, turning the preemption's lost prefill work into a cache
-        hit."""
-        if rid in self.prefilling:
-            pf = self.prefilling.pop(rid)
-            self._publish_prompt_pages(pf.item.prompt, pf.slots[0],
-                                       pf.filled)
-            self._release(pf.slots)
-        else:
-            rs, slots = self.active.pop(rid)
-            self._slots_dev.pop(rid, None)
-            self._publish_prompt_pages(self._items[rid].prompt, slots[0],
-                                       len(self._items[rid].prompt))
-            rs.strategy.release_pool()
-            self._release(slots)
-        self._admit_seq.pop(rid, None)
-        # latency stamps restart with the replay
-        self.ttft.pop(rid, None)
-        self.token_times.pop(rid, None)
-        self.queue.appendleft(self._items.pop(rid))
+        rows (:meth:`_requeue` — fully-written prompt pages are
+        published into the prefix cache first, so the replay aliases
+        them back as a hit), return its original submission to the
+        queue head. On re-admission it replays prefill and decode from
+        its original RNG stream, so the final tokens are identical to a
+        never-preempted run. Preemptions forced by an injected
+        allocator embargo are charged to the victim's retry budget —
+        genuine pressure requeues for free."""
+        item = self._requeue(rid)
         self.counters["preemptions"] += 1
+        if self._fault_tick:
+            self._retry_or_quarantine(item)
+        else:
+            self.queue.appendleft(item)
 
     def _reclaim(self, n: int) -> bool:
         """Make ``n`` pages allocatable by evicting least-recently-hit
@@ -1204,6 +1499,11 @@ class PagedScheduler(_SchedulerBase):
         self._page_peak = max(self._page_peak, self.alloc.used_count)
 
     def _decode_tick(self):
+        # step-fault injection point: BEFORE chunk growth and
+        # _ensure_pages, so a fault aborts the tick with the allocator
+        # and pool untouched (retry is then trivially sound — the
+        # donated device buffers were never consumed either)
+        engine.check_step_fault(self.faults, self.ticks)
         # grow every fused chunk's pages FIRST — growth can evict or
         # preempt, which must settle before write pages are certified
         # below (growth runs in admission order, matching the standalone

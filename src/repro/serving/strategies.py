@@ -48,6 +48,9 @@ class GenResult:
     steps: int
     compactions: List[int] = field(default_factory=list)
     extra: Dict = field(default_factory=dict)
+    status: str = "OK"                # terminal status: OK | CANCELLED |
+                                      #   TIMEOUT | FAILED | SHED
+    n_retries: int = 0                # fault-triggered replays before finish
 
 
 @dataclass

@@ -194,6 +194,126 @@ def test_fuzz_equivalence_stbon_aligned(setup):
     _run_case(setup, case)
 
 
+# --------------------------------------------------------------- chaos
+
+from repro.serving.faults import FaultPlan  # noqa: E402
+
+TERMINAL = {"OK", "CANCELLED", "TIMEOUT", "FAILED", "SHED"}
+
+
+def _run_chaos_case(setup, case):
+    """The lifecycle-hardening twin of :func:`_run_case`: the same
+    workload served under seeded fault injection plus random cancels
+    and tick budgets, on both schedulers (prefix cache on and off).
+    Every request must reach a terminal status, OK survivors must stay
+    token-for-token equal to the sequential reference (the fault-replay
+    determinism guarantee), and nothing may leak."""
+    cfg, params, kcfg = setup
+    reqs, order, chunk = case["reqs"], case["order"], case["chunk"]
+    pre_len = case.get("pre_len", 0)
+    prompts = [_prompt(case["seed"], i, plen, pre_len)
+               for i, (_, plen, _) in enumerate(reqs)]
+    cancels = dict(case.get("cancel", {}))   # req index -> cancel tick
+    budgets = case.get("ticks", {})          # req index -> max_wall_ticks
+
+    seq = []
+    for i, (method, _, max_new) in enumerate(reqs):
+        import dataclasses
+        kc = dataclasses.replace(kcfg, max_new_tokens=max_new)
+        fn = getattr(engine, f"generate_{method}")
+        seq.append(fn(params, cfg, kc, prompts[i], jax.random.PRNGKey(i),
+                      eos_id=tok.EOS, bos_id=tok.BOS, max_seq=MAX_SEQ))
+
+    # a fresh FaultPlan per mode: its memo/fired state is mutable, and
+    # the two backends' tick counts differ
+    def plan():
+        return FaultPlan(seed=case["fault_seed"], max_faults=6)
+
+    common = dict(rows=8, max_seq=MAX_SEQ, method="kappa", eos_id=tok.EOS,
+                  bos_id=tok.BOS, prefill_chunk=chunk, max_retries=8)
+    modes = {
+        "contiguous": lambda: ContinuousBatchingScheduler(
+            params, cfg, kcfg, faults=plan(), **common),
+        "paged": lambda: PagedScheduler(
+            params, cfg, kcfg, page_size=PAGE_SIZE,
+            num_pages=8 * MAX_SEQ // PAGE_SIZE, faults=plan(), **common),
+        "paged-prefix": lambda: PagedScheduler(
+            params, cfg, kcfg, page_size=PAGE_SIZE,
+            num_pages=8 * MAX_SEQ // PAGE_SIZE, prefix_cache=True,
+            faults=plan(), **common),
+    }
+    for name, mk in modes.items():
+        sched = mk()
+        rids = {}
+        for i in order:
+            method, _, max_new = reqs[i]
+            rids[i] = sched.submit(prompts[i], jax.random.PRNGKey(i),
+                                   max_new=max_new, method=method,
+                                   max_wall_ticks=budgets.get(i))
+        pending = dict(cancels)
+        for _ in range(600):                 # bounded: a wedge fails loudly
+            if not (sched.queue or sched.active or sched.prefilling):
+                break
+            for i in [i for i, t in pending.items() if sched.ticks >= t]:
+                sched.cancel(rids[i])
+                del pending[i]
+            sched.tick()
+        assert not (sched.queue or sched.active or sched.prefilling), \
+            f"{name}: pool did not drain under chaos (case={case})"
+
+        res = {i: sched.results[r] for i, r in rids.items()}
+        for i, s in enumerate(seq):
+            c = res[i]
+            ctx = f"case={case} mode={name} req={i} ({reqs[i]})"
+            assert c.status in TERMINAL, ctx
+            if c.status == "OK" and i not in cancels and i not in budgets:
+                # an undisturbed-or-replayed survivor is token-equal
+                assert s.tokens == c.tokens, ctx
+                assert s.chosen_branch == c.chosen_branch, ctx
+                assert s.logical_tokens == c.logical_tokens, ctx
+        # zero-leak: every row, page and pin returned
+        assert sorted(sched.free) == list(range(8)), name
+        if getattr(sched, "pcache", None) is not None:
+            _allocator_invariants(sched.alloc)
+            sched.pcache.drop()
+        if hasattr(sched, "alloc"):
+            assert sched.alloc.free_count == sched.num_pages, \
+                f"{name}: leaked pages under chaos"
+            assert int(sched.alloc.pinned.sum()) == 0, name
+            _allocator_invariants(sched.alloc)
+
+
+def _chaos_case_from_seed(seed: int):
+    case = _case_from_seed(seed)
+    rng = np.random.default_rng(seed + 5000)
+    n = len(case["reqs"])
+    case["fault_seed"] = int(rng.integers(0, 100))
+    if rng.random() < 0.7:
+        case["cancel"] = {int(rng.integers(n)): int(rng.integers(2, 20))}
+    if rng.random() < 0.7:
+        case["ticks"] = {int(rng.integers(n)): int(rng.integers(4, 25))}
+    return case
+
+
+@pytest.mark.faults
+def test_chaos_lifecycle_small(setup):
+    """Tier-1 chaos case: faults + one mid-run cancel + one tick budget
+    over mixed methods, all three serving modes."""
+    case = {"seed": 21, "fault_seed": 5,
+            "reqs": [("kappa", 8, 10), ("greedy", 5, 6), ("bon", 9, 6)],
+            "order": [2, 0, 1], "chunk": 4, "pre_len": 4,
+            "cancel": {1: 6}, "ticks": {2: 15}}
+    _run_chaos_case(setup, case)
+
+
+@pytest.mark.slow
+@pytest.mark.fuzz
+@pytest.mark.faults
+@pytest.mark.parametrize("seed", [5, 17, 29, 41])
+def test_chaos_lifecycle_sweep(setup, seed):
+    _run_chaos_case(setup, _chaos_case_from_seed(seed))
+
+
 # --------------------------------------------------------------- sweep
 
 if HAVE_HYPOTHESIS:
