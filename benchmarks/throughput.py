@@ -43,6 +43,19 @@ pages and skip that part of prefill entirely; the scenario reports the
 hit rate and the fraction of queue-wide prefill tokens saved (>= 50%
 target) and asserts the cached run is token-for-token identical.
 
+Part 6 (PR 8 acceptance): open-loop Poisson arrival sweeps at offered
+rates expressed as multiples of the pool's measured closed-loop
+capacity, static vs SLO-adaptive admission (``repro.serving.slo``).
+Decode tick wall time is independent of the active count (fixed-shape
+pool dispatch), so overload inflates admitted ITL only through the
+prompt chunks fused into each tick — the adaptive controller bounds
+exactly that by pausing admission into prefill/decode pulses. The
+acceptance: at some offered rate where static admission pushes
+admitted ITL p99 past 1.5x the unloaded baseline, adaptive admission
+holds it within 1.5x; goodput-under-SLO per rate lands in
+BENCH_throughput.json. ``--openloop-smoke`` runs a two-rate reduced
+sweep on an untrained toy model (curve produced + zero leaks) for CI.
+
 Each scheduler run also reports a per-tick wall-time breakdown (model
 step / sampler dispatch / pooled-controller dispatch / blocking sync /
 per-request host work) so controller-overhead regressions are visible:
@@ -53,6 +66,7 @@ asserted here via the scheduler's dispatch/sync counters.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import jax
@@ -60,14 +74,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.configs import get_config
 from repro.configs.base import KappaConfig
 from repro.data import tasks
 from repro.data import tokenizer as tok
 from repro.launch.serve import _strategy_factory
-from repro.models import init_cache
+from repro.models import init_cache, init_params
 from repro.serving import engine
 from repro.serving import sampler
 from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
+from repro.serving.slo import SLOConfig, SLOController
 
 DEPTHS = [1, 4, 8] if common.FULL else [1, 4]
 PAGED_DEPTHS = [8, 16]          # acceptance criterion lives at depth >= 8
@@ -465,6 +481,232 @@ def _overload_scenario(cfg, params):
     }]
 
 
+OPENLOOP_ROWS = 8               # greedy pool rows (fixed dispatch shape)
+OPENLOOP_CHUNK = 256            # prompt tokens fused into a tick per admit:
+                                # big enough that chunk COMPUTE (not just
+                                # dispatch overhead) is what a concurrent
+                                # admission costs the in-flight decoders
+OPENLOOP_QUEUE = 12             # bounded admission queue (static's only gate)
+OPENLOOP_PROMPT = 256           # uniform prompt length == ONE chunk. The
+                                # fused tick dispatch is keyed on each
+                                # chunk's block-table extent (grows with
+                                # chunk index), so multi-chunk prompts make
+                                # the jit key the multiset of in-flight
+                                # chunk indices — unwarmable. One chunk per
+                                # prompt collapses the key to HOW MANY
+                                # admissions ride the tick: rows-1 shapes,
+                                # warmed exactly below
+OPENLOOP_MAX_NEWS = [10, 10, 10, 28]  # cycled per request: trios of
+                                # equal-length requests complete (and
+                                # free rows) together, so under backlog
+                                # a static gate re-admits ~3 at once —
+                                # the burst whose fused chunks inflate
+                                # the long-running requests' ITL; the
+                                # 28s keep decoders in flight to witness
+                                # it
+OPENLOOP_REQS = 32              # enough ITL samples (~600 gaps) that a
+                                # p99 is a population, not one outlier
+OPENLOOP_RATES_X = [0.25, 1.0, 2.5]  # offered rate / measured capacity:
+                                # clean unloaded anchor (arrivals rarely
+                                # collide), saturation, sustained
+                                # overload
+OPENLOOP_SMOKE_RATES_X = [0.25, 2.5]
+OPENLOOP_SLO_MARGIN = 1.35      # controller target = margin x unloaded
+                                # p99. Must clear the cost of ONE paced
+                                # admission tick (the unloaded p99 IS
+                                # that tick), else every window that
+                                # admits anything reads violated and the
+                                # controller oscillates into pause
+OPENLOOP_SLO_BOUND = 1.5        # acceptance bound (matches overload gate)
+OPENLOOP_WINDOW = 8             # controller window (ticks) — reacts well
+                                # inside one admission's prefill
+
+
+def _openloop_prompts(n_req: int):
+    """``n_req`` concatenated prompts of exactly OPENLOOP_PROMPT tokens
+    each (distinct content, uniform length — see the shape note on
+    OPENLOOP_PROMPT)."""
+    base = _prompts(32 * n_req)
+    prompts, i = [], 0
+    for _ in range(n_req):
+        pieces, total = [base[i]], len(base[i])
+        i += 1
+        while total < OPENLOOP_PROMPT:
+            assert i < len(base), "ran out of prompt pieces"
+            pieces.append(base[i][1:])       # strip BOS, keep body + QM
+            total += len(base[i]) - 1
+            i += 1
+        flat = np.concatenate(pieces)[:OPENLOOP_PROMPT].copy()
+        flat[-1] = tok.QM
+        prompts.append(flat)
+    return prompts
+
+
+def _poisson_arrivals(rate_rps: float, n: int, seed: int):
+    """Cumulative open-loop arrival times. Seeded: every rate reuses the
+    same exponential draws, so sweeps differ only by the 1/rate scale."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def _drive_open_loop(sched, prompts, arrivals, max_news, ctl=None):
+    """Open-loop serving: submit each request at its wall-clock arrival
+    time regardless of pool state (arrivals do not wait for capacity —
+    the definition of offered load), tick while anything is in flight,
+    let the controller evaluate after every tick. Stamps
+    ``sched.elapsed`` like ``run()`` does."""
+    rids = [None] * len(prompts)
+    # a GC pause inside a measured tick reads as a phantom ITL spike at
+    # p99 — collect up front, disable during the run
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = sched.clock()
+        nxt = 0
+        while nxt < len(prompts) or sched.has_work:
+            now = sched.clock() - t0
+            while nxt < len(prompts) and arrivals[nxt] <= now:
+                rids[nxt] = sched.submit(prompts[nxt],
+                                         jax.random.PRNGKey(nxt),
+                                         max_new=max_news[nxt])
+                nxt += 1
+            if sched.has_work:
+                sched.tick()
+                if ctl is not None:
+                    ctl.on_tick()
+            else:
+                time.sleep(min(max(arrivals[nxt] - now, 0.0), 0.002))
+        sched.elapsed = sched.clock() - t0
+    finally:
+        gc.enable()
+    return rids
+
+
+def _openloop_scenario(cfg, params, smoke=False):
+    """Part 6: offered-rate sweep, static vs SLO-adaptive admission.
+
+    Capacity is calibrated from a warm closed-loop drain of the same
+    prompts (which also absorbs every jit shape the sweep touches); the
+    lowest-rate static run defines the unloaded admitted-ITL p99 that
+    anchors both the controller's target and the acceptance bound.
+    Every run asserts zero leaked pages/pins after drain."""
+    kcfg = KappaConfig(num_branches=4,
+                       max_new_tokens=max(OPENLOOP_MAX_NEWS),
+                       **common.KCFG_KW)
+    n_req = 8 if smoke else OPENLOOP_REQS
+    rates_x = OPENLOOP_SMOKE_RATES_X if smoke else OPENLOOP_RATES_X
+    prompts = _openloop_prompts(n_req)
+    max_news = [OPENLOOP_MAX_NEWS[i % len(OPENLOOP_MAX_NEWS)]
+                for i in range(n_req)]
+    max_seq = OPENLOOP_PROMPT + max(OPENLOOP_MAX_NEWS)
+    max_seq = -(-max_seq // PAGE_SIZE) * PAGE_SIZE
+    num_pages = OPENLOOP_ROWS * max_seq // PAGE_SIZE
+
+    def mk(max_queue=OPENLOOP_QUEUE):
+        return PagedScheduler(params, cfg, kcfg, rows=OPENLOOP_ROWS,
+                              max_seq=max_seq, page_size=PAGE_SIZE,
+                              num_pages=num_pages, method="greedy",
+                              eos_id=tok.EOS, bos_id=tok.BOS,
+                              prefill_chunk=OPENLOOP_CHUNK,
+                              max_queue=max_queue)
+
+    # deterministic jit warm-up. The fused tick dispatch is keyed on how
+    # many prompt chunks ride it, so warm every k the sweep can hit
+    # (k prefilling + at least one decoding, bounded by the row pool):
+    # admit one request to decode, then admit k more at once so their
+    # chunks fuse into its ticks. A compile landing inside a measured
+    # run would masquerade as a multi-second ITL spike.
+    for k in range(1, OPENLOOP_ROWS):
+        sched = mk(max_queue=None)
+        sched.submit(prompts[0], jax.random.PRNGKey(0),
+                     max_new=max(OPENLOOP_MAX_NEWS))
+        for _ in range(OPENLOOP_PROMPT // OPENLOOP_CHUNK + 1):
+            sched.tick()                     # request 0 reaches decode
+        for j in range(1, k + 1):
+            sched.submit(prompts[j % n_req], jax.random.PRNGKey(j),
+                         max_new=min(OPENLOOP_MAX_NEWS))
+        sched.run()
+    # closed-loop drain (unbounded queue, whole batch at tick 0) on the
+    # warmed shapes: the capacity estimate offered rates are scaled by
+    sched_w = mk(max_queue=None)
+    for i, p in enumerate(prompts):
+        sched_w.submit(p, jax.random.PRNGKey(i), max_new=max_news[i])
+    res_w = sched_w.run()
+    assert all(r.status == "OK" for r in res_w.values())
+    capacity_rps = len(prompts) / max(sched_w.elapsed, 1e-9)
+
+    def run_rate(rate_rps, *, target_itl=None):
+        sched = mk()
+        ctl = None
+        if target_itl is not None:
+            # min_prefill_chunk pins the chunk knob: halving it mid-run
+            # would introduce unwarmed fused-dispatch shapes whose
+            # compiles dwarf the knob's benefit at toy scale — the
+            # admission pacing budget (level 1), pause (level 2) and
+            # shed (level 3) are the levers under test. start_level=1:
+            # admission begins paced (one chunk of new prompt per tick)
+            # and healthy windows relax it — reacting only AFTER a
+            # violated window would serve the first burst at full blast
+            ctl = SLOController(sched, SLOConfig(
+                target_itl_p99_s=target_itl,
+                window_ticks=OPENLOOP_WINDOW, min_itl_samples=4,
+                min_prefill_chunk=OPENLOOP_CHUNK, start_level=1))
+        arrivals = _poisson_arrivals(rate_rps, n_req, seed=4242)
+        rids = _drive_open_loop(sched, prompts, arrivals, max_news, ctl)
+        res = sched.results
+        ok = [r for r in rids if res[r].status == "OK"]
+        elapsed = max(sched.elapsed, 1e-9)
+        stat = {
+            "offered_rps": rate_rps,
+            "ok": len(ok),
+            "shed": sum(res[r].status == "SHED" for r in rids),
+            "attained_ok_rps": len(ok) / elapsed,
+            "goodput_tokens_per_s": sum(res[r].logical_tokens
+                                        for r in ok) / elapsed,
+            "admitted_itl_p99_s": _itl_p99_s(sched, ok),
+            "elapsed_s": sched.elapsed,
+            "ticks": sched.ticks,
+        }
+        if ctl is not None:
+            stat["controller_max_level"] = max(
+                (h["level"] for h in ctl.history), default=0)
+            stat["controller_windows"] = len(ctl.history)
+        assert sched.alloc.free_count == sched.num_pages, "leaked pages"
+        assert int(sched.alloc.pinned.sum()) == 0, "leaked pins"
+        return stat
+
+    unloaded = run_rate(rates_x[0] * capacity_rps)
+    unloaded_itl = max(unloaded["admitted_itl_p99_s"], 1e-9)
+    target_itl = OPENLOOP_SLO_MARGIN * unloaded_itl
+    slo_itl = OPENLOOP_SLO_BOUND * unloaded_itl
+    out = []
+    for rx in rates_x:
+        rate = rx * capacity_rps
+        static = unloaded if rx == rates_x[0] else run_rate(rate)
+        adaptive = run_rate(rate, target_itl=target_itl)
+        for stat in (static, adaptive):
+            stat["meets_slo"] = stat["admitted_itl_p99_s"] <= slo_itl
+            stat["goodput_under_slo_tokens_per_s"] = \
+                stat["goodput_tokens_per_s"] if stat["meets_slo"] else 0.0
+        out.append({
+            "kind": "openloop", "method": "greedy", "rows": OPENLOOP_ROWS,
+            "n_requests": n_req, "prompt_len": max(len(p) for p in prompts),
+            "prefill_chunk": OPENLOOP_CHUNK, "max_queue": OPENLOOP_QUEUE,
+            "page_size": PAGE_SIZE,
+            "capacity_rps": capacity_rps, "rate_x_capacity": rx,
+            "offered_rps": rate,
+            "unloaded_itl_p99_s": unloaded_itl,
+            "slo_itl_p99_s": slo_itl,
+            "controller_target_itl_p99_s": target_itl,
+            "static": static, "adaptive": adaptive,
+            "static_itl_vs_unloaded": static["admitted_itl_p99_s"]
+            / unloaded_itl,
+            "adaptive_itl_vs_unloaded": adaptive["admitted_itl_p99_s"]
+            / unloaded_itl,
+        })
+    return out
+
+
 def run(cfg, params):
     kcfg = _kcfg()
     fan_out = kcfg.num_branches
@@ -638,6 +880,7 @@ def run(cfg, params):
     out.extend(_interleave_scenario(cfg, params))
     out.extend(_prefix_scenario(cfg, params))
     out.extend(_overload_scenario(cfg, params))
+    out.extend(_openloop_scenario(cfg, params))
     return out
 
 
@@ -677,6 +920,19 @@ def emit_csv(rows):
                        f"shed_rate={r['shed_rate']:.2f};"
                        f"miss_rate={r['deadline_miss_rate']:.2f};"
                        f"goodput_tok_s={r['goodput_tokens_per_s']:.1f}")
+        elif r["kind"] == "openloop":
+            name = f"throughput/openloop_{r['rate_x_capacity']:g}x"
+            us = r["adaptive"]["admitted_itl_p99_s"] * 1e6
+            derived = (f"offered_rps={r['offered_rps']:.2f};"
+                       f"static_itl_ratio={r['static_itl_vs_unloaded']:.2f};"
+                       f"adaptive_itl_ratio="
+                       f"{r['adaptive_itl_vs_unloaded']:.2f};"
+                       f"static_goodput_tok_s="
+                       f"{r['static']['goodput_tokens_per_s']:.1f};"
+                       f"adaptive_goodput_tok_s="
+                       f"{r['adaptive']['goodput_tokens_per_s']:.1f};"
+                       f"static_shed={r['static']['shed']};"
+                       f"adaptive_shed={r['adaptive']['shed']}")
         elif r["kind"] == "fanout":
             name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
             us = r["time_s"] * 1e6 / max(r["ticks"], 1)
@@ -702,7 +958,33 @@ def emit_csv(rows):
     return out
 
 
+def openloop_smoke():
+    """CI entry (``--openloop-smoke``): two-rate open-loop sweep on an
+    untrained toy model — asserts the goodput-under-SLO curve is
+    produced for both admission modes and (inside the scenario) that
+    every run drains with zero leaked pages/pins."""
+    cfg = get_config("deepseek-r1-distill-qwen-1.5b").reduced(
+        num_layers=2, d_model=64, vocab_size=tok.VOCAB_SIZE)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rows = _openloop_scenario(cfg, params, smoke=True)
+    print("name,us_per_call,derived")
+    for line in emit_csv(rows):
+        print(line)
+    assert len(rows) == len(OPENLOOP_SMOKE_RATES_X)
+    for r in rows:
+        for mode in ("static", "adaptive"):
+            assert r[mode]["goodput_tokens_per_s"] >= 0.0
+            assert "goodput_under_slo_tokens_per_s" in r[mode]
+            assert r[mode]["ok"] > 0, f"{mode} starved every request"
+    print(f"# openloop smoke: {len(rows)} rates x 2 admission modes, "
+          f"goodput curve produced, zero leaks after drain -> PASS")
+
+
 if __name__ == "__main__":
+    import sys
+    if "--openloop-smoke" in sys.argv:
+        openloop_smoke()
+        sys.exit(0)
     cfg, params = common.bench_model()
     t0 = time.time()
     rows = run(cfg, params)
@@ -781,6 +1063,28 @@ if __name__ == "__main__":
                   f"goodput {r['goodput_tokens_per_s']:.1f} tok/s; "
                   f"admitted ITL p99 {ratio:.2f}x unloaded "
                   f"(<=1.5 target) -> {verdict}")
+    ol = [r for r in rows if r["kind"] == "openloop"]
+    for r in ol:
+        a, s = r["adaptive"], r["static"]
+        print(f"# openloop {r['rate_x_capacity']:g}x capacity "
+              f"({r['offered_rps']:.2f} req/s offered): admitted ITL p99 "
+              f"{r['static_itl_vs_unloaded']:.2f}x (static) / "
+              f"{r['adaptive_itl_vs_unloaded']:.2f}x (adaptive) unloaded; "
+              f"goodput {s['goodput_tokens_per_s']:.1f} vs "
+              f"{a['goodput_tokens_per_s']:.1f} tok/s "
+              f"(under-SLO {s['goodput_under_slo_tokens_per_s']:.1f} vs "
+              f"{a['goodput_under_slo_tokens_per_s']:.1f}); shed "
+              f"{s['shed']} vs {a['shed']}")
+    if ol:
+        sep = [r for r in ol
+               if r["static_itl_vs_unloaded"] > OPENLOOP_SLO_BOUND
+               and r["adaptive_itl_vs_unloaded"] <= OPENLOOP_SLO_BOUND]
+        verdict = "PASS" if sep else "FAIL"
+        at = (f" at {sep[0]['rate_x_capacity']:g}x capacity"
+              if sep else "")
+        print(f"# acceptance: adaptive admission holds admitted ITL p99 "
+              f"<= {OPENLOOP_SLO_BOUND}x unloaded at an offered rate "
+              f"where static admission exceeds it{at} -> {verdict}")
     for r in rows:
         if r["kind"] == "fanout":
             print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "

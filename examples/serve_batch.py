@@ -1,6 +1,7 @@
 """End-to-end serving driver: train a small model once, then serve a
 batch of reasoning requests under all four decoding strategies and print
-the paper's comparison table (accuracy / tokens / peak memory).
+the paper's comparison table (accuracy / tokens / peak memory), then the
+same pool behind the async streaming front-end (DESIGN.md §9).
 
   PYTHONPATH=src python examples/serve_batch.py [--steps 1200] [--problems 30]
 """
@@ -57,12 +58,25 @@ print(f"paged pool        (N=5, rows=20): {pg5['tokens_per_s']:.1f} tok/s, "
       f"page utilization {pg5['page_utilization']:.2f} "
       f"(wall {pg5['time_s']:.1f}s)")
 
-# per-terminal-status summary: with no faults, deadlines, or queue bound
-# every request should land in OK — anything else is worth seeing here
-for name, r in [("continuous", cb5), ("paged", pg5)]:
+# the same paged pool behind the async streaming front-end: every
+# request is an AsyncIterator of token events, tokens arrive as the
+# scheduler commits them, and the reassembled streams are asserted
+# token-for-token equal to the terminal results
+fe5 = serve_eval(args.arch, "kappa", n=5, problems=args.problems,
+                 params=params, cfg=cfg, verbose=False, scheduler=True,
+                 paged=True, page_size=16, sched_rows=20,
+                 frontend_serve=True, stream=True)
+print(f"streaming frontend(N=5, rows=20): {fe5['tokens_per_s']:.1f} tok/s, "
+      f"{fe5['requests_per_s']:.2f} req/s (wall {fe5['time_s']:.1f}s)")
+
+# per-terminal-status summary with goodput (OK tokens per wall second —
+# the number the SLO-adaptive admission sweep optimizes): with no
+# faults, deadlines, or queue bound every request should land in OK
+for name, r in [("continuous", cb5), ("paged", pg5), ("frontend", fe5)]:
     sc = r["status_counts"]
-    print(f"{name} statuses: "
+    print(f"{name:10s} statuses: "
           + " ".join(f"{k}={sc.get(k, 0)}"
                      for k in ("OK", "CANCELLED", "TIMEOUT", "FAILED",
                                "SHED"))
-          + f" (retries={r['retries']})")
+          + f" (retries={r['retries']}, "
+          + f"goodput={r['goodput_tokens_per_s']:.1f} tok/s)")

@@ -9,7 +9,7 @@ The reference chain-of-thought emits every intermediate partial result:
 Answer correctness = the value token after ANS matches the ground truth.
 This gives a GSM8K-like shape: multi-step reasoning where sampled
 branches genuinely diverge in quality, so BoN/ST-BoN/KAPPA comparisons
-are meaningful at toy scale (DESIGN.md §10).
+are meaningful at toy scale (DESIGN.md §11).
 """
 from __future__ import annotations
 

@@ -8,10 +8,17 @@ metric columns.
 ``--scheduler`` serves the same prompts through the continuous-batching
 row pool (repro.serving.scheduler) instead of one at a time, and adds
 throughput columns (requests/s, tokens/s, row utilization).
+
+``--frontend`` drives the same pool through the async streaming
+front-end (repro.serving.frontend) instead of batch ``run()``: every
+request is submitted and consumed as a concurrent event stream;
+``--stream`` additionally asserts each stream's tokens reassemble the
+terminal result exactly (the §9 equivalence contract, end to end).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -26,6 +33,7 @@ from repro.models.frontends import stub_frontend
 from repro.serving import engine
 from repro.serving import faults as faults_lib
 from repro.serving import strategies
+from repro.serving.frontend import ServingFrontend
 from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
 from repro.training import checkpoint
 
@@ -46,6 +54,39 @@ def _strategy_factory(method: str, kcfg: KappaConfig):
     return lambda: strategies.make_strategy(method)
 
 
+def _serve_frontend(sched, test, *, deadline_s, stream: bool):
+    """Drive every prompt through the async streaming front-end
+    concurrently; returns results in submission order. With ``stream``,
+    asserts each stream's token events reassemble the terminal result
+    exactly (committed-prefix + terminal-flush contract)."""
+
+    async def go():
+        t0 = sched.clock()
+        async with ServingFrontend(sched) as fe:
+
+            async def one(i, prob):
+                toks, res = [], None
+                async for ev in fe.submit_stream(
+                        np.array(prob.prompt), jax.random.PRNGKey(i),
+                        deadline_s=deadline_s):
+                    if ev.kind == "token":
+                        toks.append(ev.token)
+                    else:
+                        res = ev.result
+                if stream:
+                    assert toks == res.tokens, \
+                        f"rid stream diverged from result ({res.status})"
+                return res
+
+            gens = await asyncio.gather(
+                *[one(i, p) for i, p in enumerate(test)])
+        # no batch run() ran, so stamp elapsed for throughput() ourselves
+        sched.elapsed = sched.clock() - t0
+        return gens
+
+    return asyncio.run(go())
+
+
 def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                ckpt: str | None = None, d_model: int = 256,
                num_layers: int = 2, seed: int = 999, max_new: int = 48,
@@ -58,7 +99,9 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                prefix_cache: bool = False,
                inject_faults: str | None = None,
                max_queue: int | None = None,
-               deadline_s: float | None = None) -> dict:
+               deadline_s: float | None = None,
+               frontend_serve: bool = False,
+               stream: bool = False) -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
@@ -71,7 +114,8 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
               horizon=8, window=8, mom_buckets=4)
     kw.update(kcfg_kw or {})
     kcfg = KappaConfig(**kw)
-    scheduler = scheduler or paged  # paged pool implies the scheduler path
+    # paged pool / streaming front-end both imply the scheduler path
+    scheduler = scheduler or paged or frontend_serve
     dkw = dict(min_steps=2, max_steps=5, num_ops=2, max_operand=10)
     dkw.update(dataset_kw or {})
     test = tasks.make_dataset(seed, problems, **dkw)
@@ -96,11 +140,16 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                                    prefix_cache=prefix_cache, **sched_kw)
         else:
             sched = ContinuousBatchingScheduler(params, cfg, kcfg, **sched_kw)
-        rids = [sched.submit(np.array(prob.prompt), jax.random.PRNGKey(i),
-                             deadline_s=deadline_s)
-                for i, prob in enumerate(test)]
-        res = sched.run()
-        gens = [res[rid] for rid in rids]
+        if frontend_serve:
+            gens = _serve_frontend(sched, test, deadline_s=deadline_s,
+                                   stream=stream)
+        else:
+            rids = [sched.submit(np.array(prob.prompt),
+                                 jax.random.PRNGKey(i),
+                                 deadline_s=deadline_s)
+                    for i, prob in enumerate(test)]
+            res = sched.run()
+            gens = [res[rid] for rid in rids]
     else:
         gens = []
         for i, prob in enumerate(test):
@@ -145,6 +194,10 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
         })
         out["ttft_p99_s"] = tp["ttft_p99_s"]
         out["itl_p99_s"] = tp["itl_p99_s"]
+        # goodput: OK tokens per wall second — comparable between the
+        # batch run() path and the streaming front-end path
+        ok_tokens = sum(r.logical_tokens for r in gens if r.status == "OK")
+        out["goodput_tokens_per_s"] = ok_tokens / max(tp["time_s"], 1e-9)
         if paged:
             out["page_utilization"] = tp["page_utilization"]
             out["page_peak"] = tp["page_peak"]
@@ -159,7 +212,9 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                 f"total_toks={out['total_tokens']:8.1f} "
                 f"peak={out['peak_memory_mb']:8.3f}MB t={out['time_s']:.1f}s")
         if scheduler:
-            line += (f" | sched: {out['tokens_per_s']:.1f} tok/s "
+            mode = "frontend" if frontend_serve else "sched"
+            line += (f" | {mode}: {out['tokens_per_s']:.1f} tok/s "
+                     f"goodput={out['goodput_tokens_per_s']:.1f} tok/s "
                      f"{out['requests_per_s']:.2f} req/s "
                      f"util={out['row_utilization']:.2f}")
         if paged and prefix_cache:
@@ -236,6 +291,14 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request wall-clock deadline; expired "
                          "requests truncate to a TIMEOUT result")
+    ap.add_argument("--frontend", action="store_true",
+                    help="drive the pool through the async streaming "
+                         "front-end (concurrent per-request event "
+                         "streams) instead of batch run(); implies "
+                         "--scheduler")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --frontend: assert every stream's token "
+                         "events reassemble its terminal result exactly")
     args = ap.parse_args(argv)
     serve_eval(args.arch, args.method, n=args.n, problems=args.problems,
                ckpt=args.ckpt, max_new=args.max_new,
@@ -244,7 +307,9 @@ def main(argv=None):
                num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
                prefix_cache=args.prefix_cache,
                inject_faults=args.inject_faults, max_queue=args.max_queue,
-               deadline_s=args.deadline_s)
+               deadline_s=args.deadline_s,
+               frontend_serve=args.frontend or args.stream,
+               stream=args.stream)
 
 
 if __name__ == "__main__":

@@ -78,6 +78,19 @@ overflowed at submit time). Injected faults (``serving.faults``) are
 answered with the preemption-replay machinery: tear down, requeue with
 exponential backoff, replay token-for-token from the original
 submission RNG.
+
+Streaming surface (DESIGN.md §9): every tick emits :class:`TokenEvent`s
+through ``event_sink`` (or collects them per-:meth:`step` call) — one
+``kind="token"`` event per newly *committed* generated token (a token
+whose membership in the final output can no longer change, per the
+strategy's ``decided_branch``) and exactly one ``kind="end"`` terminal
+event per submission, carrying the ``GenResult``. All wall-clock reads
+(submit stamps, deadlines, TTFT/ITL stamps, run elapsed) go through the
+injectable ``clock=`` callable (default ``time.monotonic``) so latency
+behaviour is testable without sleeping; retry backoff stays tick-counted
+and needs no clock. :meth:`snapshot` reads the per-window TTFT/ITL
+percentiles and goodput counters the SLO controller (``serving.slo``)
+and the open-loop arrival sweeps consume.
 """
 from __future__ import annotations
 
@@ -147,6 +160,25 @@ class _Prefill:
     aux: object = None         # paged backend: batch-1 per-row-family state
 
 
+@dataclasses.dataclass
+class TokenEvent:
+    """One streaming event for one request (DESIGN.md §9).
+
+    ``kind="token"``: one committed generated token (``token`` /
+    ``index`` — indices are strictly increasing per rid and match the
+    final ``GenResult.tokens`` positions). ``kind="end"``: the terminal
+    event, exactly one per submission, carrying ``status`` and the full
+    ``result``; ``index`` is the total token count. ``t`` is a
+    scheduler-clock stamp."""
+    rid: int
+    kind: str                              # "token" | "end"
+    t: float
+    index: int = 0
+    token: Optional[int] = None
+    status: Optional[str] = None           # terminal status on "end"
+    result: Optional[GenResult] = None
+
+
 class _SchedulerBase:
     """Queue + row-slot lifecycle + fused tick, independent of how KV
     storage is reserved. Subclasses implement the storage policy."""
@@ -159,7 +191,9 @@ class _SchedulerBase:
                  prefill_chunk: Optional[int] = None,
                  faults: Optional[faults_lib.FaultPlan] = None,
                  max_retries: int = 3, retry_backoff: int = 2,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 event_sink: Optional[Callable[[TokenEvent], None]] = None):
         self.params = params
         self.cfg = cfg
         self.kcfg = kcfg
@@ -244,11 +278,42 @@ class _SchedulerBase:
         # structure (prompt-sized side cache / chunked aux state) — the
         # regression knob for the old max_seq-sized throwaway cache
         self.admit_peak_bytes = 0
+        # injectable monotonic clock: every user-visible latency read
+        # (submit stamps, deadlines, TTFT/ITL, run elapsed) goes through
+        # it so tests advance time without sleeping. The tick_time
+        # profiling breakdown keeps real perf_counter deltas — it
+        # measures compute cost, not request-visible latency.
+        self.clock: Callable[[], float] = clock or time.monotonic
         # latency bookkeeping: submit walltime, time-to-first-token and
         # per-tick token emission stamps (ITL = consecutive diffs)
         self._submit_t: Dict[int, float] = {}
         self.ttft: Dict[int, float] = {}
         self.token_times: Dict[int, List[float]] = {}
+        # streaming surface (DESIGN.md §9): per-event callback, per-step
+        # capture list, and the per-rid count of already-emitted tokens
+        self.event_sink = event_sink
+        self._tick_events: Optional[List[TokenEvent]] = None
+        self._streamed: Dict[int, int] = {}
+        # SLO-controller admission knob: while True, _admit_one admits
+        # nothing (queued work waits; the bounded queue still sheds at
+        # the door) — serving.slo flips it per latency window
+        self.admit_paused = False
+        # admission pacing knob: at most this many NEW prompt tokens
+        # enter PREFILLING per tick (None = unbounded). k same-tick
+        # admissions each ride a full chunk through the fused dispatch,
+        # k-fold inflating every active request's ITL for that tick —
+        # the budget spreads bursts across ticks instead. Greedy-spend:
+        # admission proceeds while budget remains, so the last admit may
+        # overshoot by one prompt; a budget >= 1 always admits when idle.
+        self.prefill_budget: Optional[int] = None
+        self._admit_left: Optional[int] = None
+        # windowed latency/goodput accounting read by snapshot()
+        self._win_t0 = self.clock()
+        self._win_tick0 = 0
+        self._win_ttft: List[float] = []
+        self._win_itl: List[float] = []
+        self._win_counts = {"completed": 0, "ok": 0, "ok_tokens": 0,
+                            "shed": 0}
 
     # ----------------------------------------------------- storage hooks
 
@@ -374,11 +439,11 @@ class _SchedulerBase:
             # terminal SHED result rather than queueing into certain
             # deadline misses (the admitted requests' ITL is protected)
             self.counters["shed"] += 1
-            self.results[rid] = self._empty_result(item, "SHED")
+            self._record_result(rid, self._empty_result(item, "SHED"))
             return rid
         if deadline_s is not None or max_wall_ticks is not None:
             self._has_deadlines = True
-        self._submit_t.setdefault(rid, time.perf_counter())
+        self._submit_t.setdefault(rid, self.clock())
         self.queue.append(item)
         return rid
 
@@ -394,6 +459,67 @@ class _SchedulerBase:
             lengths=np.zeros((n,), np.int64),
             logical_tokens=0, compute_tokens=0, peak_cache_bytes=0,
             steps=0, status=status, n_retries=item.n_retries)
+
+    # ---------------------------------------------------- event emission
+
+    @property
+    def _emitting(self) -> bool:
+        return self.event_sink is not None or self._tick_events is not None
+
+    def _emit(self, ev: TokenEvent) -> None:
+        if self._tick_events is not None:
+            self._tick_events.append(ev)
+        if self.event_sink is not None:
+            self.event_sink(ev)
+
+    def _emit_committed(self, rid: int, now: float) -> None:
+        """Emit TokenEvents for an active request's newly *committed*
+        tokens: tokens on the strategy's ``decided_branch`` — the branch
+        certain to be the final choice (greedy always, kappa once pruned
+        to one survivor, ST-BoN once truncated; BoN stays undecided until
+        the terminal flush). A preempted/faulted request replays
+        token-identically, so the streamed prefix stays valid across
+        teardown: ``_streamed`` survives requeue and emission resumes
+        past it."""
+        if not self._emitting:
+            return
+        rs, _ = self.active[rid]
+        b = rs.strategy.decided_branch(rs.branch_ids, rs.done)
+        if b is None:
+            return
+        hi = int(rs.log.len[b])
+        start = self._streamed.get(rid, 0)
+        if hi <= start:
+            return
+        buf = rs.log.buf[b]
+        for i in range(start, hi):
+            self._emit(TokenEvent(rid=rid, kind="token", t=now, index=i,
+                                  token=int(buf[i])))
+        self._streamed[rid] = hi
+
+    def _record_result(self, rid: int, res: GenResult) -> GenResult:
+        """Single funnel for terminal results: store, window-account,
+        flush any not-yet-streamed tokens (the committed prefix already
+        emitted is always a prefix of ``res.tokens``), and emit the
+        exactly-once terminal event."""
+        assert rid not in self.results, f"duplicate terminal result {rid}"
+        self.results[rid] = res
+        self._win_counts["completed"] += 1
+        if res.status == "OK":
+            self._win_counts["ok"] += 1
+            self._win_counts["ok_tokens"] += res.logical_tokens
+        elif res.status == "SHED":
+            self._win_counts["shed"] += 1
+        start = self._streamed.pop(rid, 0)
+        if self._emitting:
+            now = self.clock()
+            for i in range(start, len(res.tokens)):
+                self._emit(TokenEvent(rid=rid, kind="token", t=now,
+                                      index=i, token=int(res.tokens[i])))
+            self._emit(TokenEvent(rid=rid, kind="end", t=now,
+                                  index=len(res.tokens), status=res.status,
+                                  result=res))
+        return res
 
     def _finalize(self, rid: int, status: str) -> GenResult:
         """Terminal teardown for an ADMITTED request (mid-PREFILLING or
@@ -419,8 +545,7 @@ class _SchedulerBase:
             self._publish_prefix(item, rs, slots)
             rs.strategy.release_pool()
             self._release(slots)
-        self.results[rid] = res
-        return res
+        return self._record_result(rid, res)
 
     def _requeue(self, rid: int) -> _Queued:
         """Non-terminal teardown: free an admitted request's rows (and
@@ -456,7 +581,7 @@ class _SchedulerBase:
         pool forever."""
         if item.n_retries >= self.max_retries:
             self.counters["failures"] += 1
-            self.results[item.rid] = self._empty_result(item, "FAILED")
+            self._record_result(item.rid, self._empty_result(item, "FAILED"))
             return
         item.n_retries += 1
         self.counters["retries"] += 1
@@ -487,7 +612,7 @@ class _SchedulerBase:
         an expired active request keeps the tokens it already has."""
         if not self._has_deadlines:
             return
-        now = time.perf_counter()
+        now = self.clock()
 
         def expired(item: _Queued) -> bool:
             if item.max_wall_ticks is not None \
@@ -504,8 +629,8 @@ class _SchedulerBase:
             keep: deque = deque()
             for item in self.queue:
                 if expired(item):
-                    self.results[item.rid] = self._empty_result(
-                        item, "TIMEOUT")
+                    self._record_result(item.rid,
+                                        self._empty_result(item, "TIMEOUT"))
                     self.counters["timeouts"] += 1
                 else:
                     keep.append(item)
@@ -528,19 +653,24 @@ class _SchedulerBase:
             if item.rid == rid:
                 del self.queue[i]
                 self.counters["cancelled"] += 1
-                res = self._empty_result(item, "CANCELLED")
-                self.results[rid] = res
-                return res
+                return self._record_result(
+                    rid, self._empty_result(item, "CANCELLED"))
         raise KeyError(f"unknown request id {rid}")
 
     # --------------------------------------------------------- admission
 
     def _admit_one(self) -> bool:
+        if self.admit_paused:
+            return False
+        if self._admit_left is not None and self._admit_left <= 0:
+            return False            # this tick's prefill budget is spent
         idx = self._select_admit()
         if idx is None:
             return False
         item = self.queue[idx]
         del self.queue[idx]
+        if self._admit_left is not None:
+            self._admit_left -= len(item.prompt)
         n = item.fan_out
         slots = sorted(self.free[:n])
         del self.free[:n]
@@ -583,13 +713,14 @@ class _SchedulerBase:
             n_prefix=self.n_prefix, frontend=self.frontend)
         self._maybe_pool_controller(rs, item)
         rs.first_tokens(pf_logits)
-        now = time.perf_counter()
+        now = self.clock()
         self.ttft[item.rid] = now - self._submit_t[item.rid]
+        self._win_ttft.append(self.ttft[item.rid])
         self.token_times[item.rid] = [now]
         if rs.finished:  # e.g. greedy whose first token is already EOS
             res = rs.result()
             res.n_retries = item.n_retries
-            self.results[item.rid] = res
+            self._record_result(item.rid, res)
             self._publish_prefix(item, rs, slots)
             rs.strategy.release_pool()
             self._release(slots)
@@ -716,6 +847,7 @@ class _SchedulerBase:
         their tick."""
         self._watchdog()
         self._fault_tick = self._begin_fault_tick()
+        self._admit_left = self.prefill_budget
         while self._admit_one():
             pass
         self._advance_prefills()
@@ -725,7 +857,10 @@ class _SchedulerBase:
             # stamps to expire and for the next tick's fault draw
             progressed = bool(self.prefilling) \
                 or any(i.not_before > self.ticks for i in self.queue) \
-                or (self._fault_tick and bool(self.queue))
+                or (self._fault_tick and bool(self.queue)) \
+                or (self.admit_paused and bool(self.queue)) \
+                or (self._admit_left is not None and self._admit_left <= 0
+                    and bool(self.queue))
             if self._fused_rids:
                 # the decode dispatch these chunks were to ride vanished
                 # (a sibling's page growth preempted the whole pool) —
@@ -856,19 +991,22 @@ class _SchedulerBase:
                 # check reads the pooled controller mirrors
                 self._finalize(rid, "OK")
         self._post_tick_prefill()
-        now = time.perf_counter()
+        now = self.clock()
         for rid in stamped:
             times = self.token_times.get(rid)
             if times is not None:      # absent iff preempted mid-tick
+                self._win_itl.append(now - times[-1])
                 times.append(now)
-        self.tick_time["host"] += now - t4
+            if rid in self.active:     # finalized rids flushed already
+                self._emit_committed(rid, now)
+        self.tick_time["host"] += time.perf_counter() - t4
         self.ticks += 1
 
     # --------------------------------------------------------------- run
 
     def run(self) -> Dict[int, GenResult]:
         """Drive queue + pool to completion; returns rid -> GenResult."""
-        t0 = time.time()
+        t0 = self.clock()
 
         def state():
             return (len(self.queue), len(self.active), len(self.prefilling),
@@ -893,10 +1031,74 @@ class _SchedulerBase:
                     #              tick advanced, the next one re-draws
                 raise RuntimeError(
                     "scheduler stalled: queued request cannot be admitted "
-                    f"(free={len(self.free)} rows)")
+                    f"(free={len(self.free)} rows, "
+                    f"admit_paused={self.admit_paused})")
         self._end_run()
-        self.elapsed = time.time() - t0
+        self.elapsed = self.clock() - t0
         return dict(sorted(self.results.items()))
+
+    # ------------------------------------------------ incremental surface
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued, prefilling, or decoding."""
+        return bool(self.queue or self.active or self.prefilling)
+
+    def step(self) -> List[TokenEvent]:
+        """One incremental tick with event capture: returns the
+        ``TokenEvent``s emitted during that tick (committed streamed
+        tokens plus terminal events), in emission order.  This is the
+        front-end's drive surface — unlike ``run()`` it never blocks past
+        a single tick, and it makes no stall judgment (an idle step on a
+        backed-off or paused queue just returns ``[]``; the caller owns
+        liveness).  ``event_sink`` still fires for every captured event,
+        so push and pull consumers see the same stream."""
+        self._tick_events = []
+        try:
+            if self.has_work:
+                self.tick()
+            return self._tick_events
+        finally:
+            self._tick_events = None
+
+    def snapshot(self, reset_window: bool = False) -> Dict[str, float]:
+        """Windowed latency/throughput counters accumulated since the
+        last ``snapshot(reset_window=True)`` (or construction).  The SLO
+        controller and the open-loop arrival sweeps read per-window
+        percentiles here instead of the run-lifetime aggregates in
+        ``latency_stats()``/``throughput()``, so a transient overload is
+        visible the window it happens rather than diluted over the run."""
+        now = self.clock()
+        win_s = max(now - self._win_t0, 1e-9)
+        ttft, itl = self._win_ttft, self._win_itl
+        out = {
+            "window_s": win_s,
+            "window_ticks": self.ticks - self._win_tick0,
+            "queued": len(self.queue),
+            "active": len(self.active),
+            "prefilling": len(self.prefilling),
+            "admit_paused": bool(self.admit_paused),
+            "prefill_budget": self.prefill_budget,
+            "ttft_count": len(ttft),
+            "itl_count": len(itl),
+            "completed": self._win_counts["completed"],
+            "ok": self._win_counts["ok"],
+            "shed": self._win_counts["shed"],
+            "ok_tokens": self._win_counts["ok_tokens"],
+            "goodput_tokens_per_s": self._win_counts["ok_tokens"] / win_s,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else 0.0,
+            "itl_p50_s": float(np.percentile(itl, 50)) if itl else 0.0,
+            "itl_p99_s": float(np.percentile(itl, 99)) if itl else 0.0,
+        }
+        if reset_window:
+            self._win_t0 = now
+            self._win_tick0 = self.ticks
+            self._win_ttft = []
+            self._win_itl = []
+            self._win_counts = {"completed": 0, "ok": 0,
+                                "ok_tokens": 0, "shed": 0}
+        return out
 
     # ----------------------------------------------------------- metrics
 
@@ -980,14 +1182,17 @@ class ContinuousBatchingScheduler(_SchedulerBase):
                  prefill_chunk: Optional[int] = None,
                  faults: Optional[faults_lib.FaultPlan] = None,
                  max_retries: int = 3, retry_backoff: int = 2,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 event_sink: Optional[Callable[[TokenEvent], None]] = None):
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,
                          fused_sampling=fused_sampling,
                          prefill_chunk=prefill_chunk, faults=faults,
                          max_retries=max_retries, retry_backoff=retry_backoff,
-                         max_queue=max_queue)
+                         max_queue=max_queue, clock=clock,
+                         event_sink=event_sink)
         self.pool = init_cache(cfg, rows, max_seq)
 
     def _admissible(self, item: _Queued) -> bool:
@@ -1099,7 +1304,9 @@ class PagedScheduler(_SchedulerBase):
                  prefix_cache: bool = False,
                  faults: Optional[faults_lib.FaultPlan] = None,
                  max_retries: int = 3, retry_backoff: int = 2,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 event_sink: Optional[Callable[[TokenEvent], None]] = None):
         max_seq = -(-max_seq // page_size) * page_size
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
@@ -1107,7 +1314,8 @@ class PagedScheduler(_SchedulerBase):
                          fused_sampling=fused_sampling,
                          prefill_chunk=prefill_chunk, faults=faults,
                          max_retries=max_retries, retry_backoff=retry_backoff,
-                         max_queue=max_queue)
+                         max_queue=max_queue, clock=clock,
+                         event_sink=event_sink)
         self.page_size = page_size
         self.max_pages = max_seq // page_size
         self.num_pages = num_pages if num_pages is not None \

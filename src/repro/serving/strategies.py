@@ -245,6 +245,16 @@ class DecodeStrategy:
     def choose(self, branch_ids: np.ndarray, done: np.ndarray) -> int:
         return int(branch_ids[0])
 
+    def decided_branch(self, branch_ids: np.ndarray,
+                       done: np.ndarray) -> Optional[int]:
+        """Branch id whose logged tokens are *committed* — certain to be
+        the final ``choose()`` pick however decoding continues — or None
+        while selection is still open. The streaming scheduler emits a
+        request's tokens only from this branch, which keeps every
+        streamed prefix a prefix of the final ``GenResult.tokens``.
+        Conservative default: undecided until the terminal flush."""
+        return None
+
     def release_pool(self) -> None:
         """Return any shared pooled-controller slot (no-op by default)."""
 
@@ -270,6 +280,9 @@ class GreedyStrategy(DecodeStrategy):
         # the EOS token itself is logged/counted (emitted before done)
         return StepDecision(counted=~done_prev,
                             stop=bool(done[branch_ids[0]]))
+
+    def decided_branch(self, branch_ids, done):
+        return int(branch_ids[0])   # one branch; every token is final
 
 
 class BoNStrategy(DecodeStrategy):
@@ -310,6 +323,12 @@ class BoNStrategy(DecodeStrategy):
 
     def choose(self, branch_ids, done):
         return int(np.argmax(self._neg_ppl()))
+
+    def decided_branch(self, branch_ids, done):
+        # perplexity ranks over the FULL fan-out (eagerly-released EOS
+        # branches included), so the winner can change until the last
+        # branch finishes — undecided unless the fan-out is one
+        return int(branch_ids[0]) if len(self.sum_lp) == 1 else None
 
     def _neg_ppl(self):
         return self.sum_lp / np.maximum(self.count, 1)
@@ -386,6 +405,11 @@ class STBoNStrategy(DecodeStrategy):
         if self.prob_cnt > 0:
             return int(branch_ids[int(np.argmax(self._consistency()))])
         return int(branch_ids[0])
+
+    def decided_branch(self, branch_ids, done):
+        # after self-truncation only the consistency winner survives and
+        # choose() is pinned to it; before that the pick can still move
+        return int(branch_ids[0]) if self.truncated else None
 
     def extra(self):
         return {"cutoff": self.cutoff_hit}
@@ -510,6 +534,15 @@ class KappaStrategy(DecodeStrategy):
 
     def choose(self, branch_ids, done):
         alive, traj = self._alive_traj()
+        masked = np.where(alive, traj, -np.inf)
+        return int(branch_ids[int(np.argmax(masked))])
+
+    def decided_branch(self, branch_ids, done):
+        # pruning is monotone (a pruned branch never revives), so once a
+        # single survivor remains it IS the final choose() pick
+        alive, traj = self._alive_traj()
+        if int(np.sum(alive)) != 1:
+            return None
         masked = np.where(alive, traj, -np.inf)
         return int(branch_ids[int(np.argmax(masked))])
 

@@ -9,6 +9,28 @@ import pytest
 
 _ = jax.devices()  # initialize backend: tests must see exactly 1 device
 
+
+class FakeClock:
+    """Deterministic stand-in for the schedulers' injectable monotonic
+    clock: time moves only when a test calls ``advance()``, so deadline
+    and latency-window tests never real-sleep."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, "monotonic clocks do not rewind"
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
 try:
     import pytest_timeout  # noqa: F401
     _HAVE_TIMEOUT_PLUGIN = True

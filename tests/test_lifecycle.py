@@ -188,12 +188,43 @@ def test_tick_budget_expires_queued(setup, paged):
     assert sorted(sched.free) == list(range(4))
 
 
-def test_wall_clock_deadline(setup):
-    sched = _mk(setup, paged=False)
+def test_wall_clock_deadline_truncates_active(setup, fake_clock):
+    """Deadline crossing is observed through the injectable clock — no
+    real sleeping: decode a few ticks, jump time past the deadline, and
+    the next tick's watchdog truncates with the partial tokens kept."""
+    sched = _mk(setup, paged=False, clock=fake_clock)
     rid = sched.submit(_prompt(0), jax.random.PRNGKey(0), method="greedy",
-                       max_new=12, deadline_s=0.0)   # already expired
+                       max_new=12, deadline_s=5.0)
+    for _ in range(3):
+        sched.tick()
+    assert rid in sched.active
+    fake_clock.advance(6.0)              # cross the deadline, zero wall time
+    sched.tick()
+    res = sched.results[rid]
+    assert res.status == "TIMEOUT"
+    assert 0 < res.steps < 12
+    assert len(res.tokens) == res.steps + 1   # truncate-and-return
+    assert sched.counters["timeouts"] == 1
+    _assert_no_leaks(sched)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_wall_clock_deadline_expires_queued(setup, paged, fake_clock):
+    # 4-row pool: the kappa request saturates it; the queued greedy
+    # request's wall deadline expires (via the fake clock) before a row
+    # frees up, so the watchdog sheds it from the queue with no tokens
+    sched = _mk(setup, paged, rows=4, clock=fake_clock)
+    r0 = sched.submit(_prompt(0), jax.random.PRNGKey(0))
+    r1 = sched.submit(_prompt(1), jax.random.PRNGKey(1), method="greedy",
+                      deadline_s=2.0)
+    sched.tick()
+    assert r0 in sched.active or r0 in sched.prefilling
+    fake_clock.advance(3.0)
+    sched.tick()
+    assert sched.results[r1].status == "TIMEOUT"
+    assert sched.results[r1].tokens == []
     out = sched.run()
-    assert out[rid].status == "TIMEOUT"
+    assert out[r0].status == "OK"
     _assert_no_leaks(sched)
 
 
