@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# repro-lint over the default trees (same invocation the CI lint job
+# runs, text output). Extra args pass through, e.g.:
+#   scripts/lint.sh --explain all
+#   scripts/lint.sh --format=json src
+set -euo pipefail
+cd "$(dirname "$0")/.."
+if [ "$#" -gt 0 ]; then
+    PYTHONPATH=src python -m repro.analysis "$@"
+else
+    PYTHONPATH=src python -m repro.analysis src benchmarks examples
+fi

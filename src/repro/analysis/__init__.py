@@ -1,0 +1,20 @@
+"""repro-lint: contract-aware static analysis for this repo
+(DESIGN.md "Static contracts & repro-lint").
+
+Run it::
+
+    python -m repro.analysis [--format=text|json|github] paths...
+    python -m repro.analysis --explain <rule>
+    scripts/lint.sh            # src benchmarks examples, text output
+
+Eight rules mechanize the repo's reproducibility contracts; see
+``python -m repro.analysis --explain all`` for the catalogue. Findings
+are suppressed inline with ``# repro-lint: disable=<rule>[,<rule>]`` or
+grandfathered (with a justifying reason) in ``.repro-lint-baseline.json``
+at the repo root.
+"""
+from repro.analysis.core import (  # noqa: F401
+    FileContext, Finding, Rule, all_rules, analyze_paths, analyze_source,
+    register, suppressed_lines,
+)
+from repro.analysis import baseline  # noqa: F401

@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` entry point."""
+import sys
+
+from repro.analysis.cli import main
+
+sys.exit(main())

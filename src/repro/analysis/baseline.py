@@ -1,0 +1,83 @@
+"""Checked-in baseline of grandfathered repro-lint findings.
+
+The baseline is the audited list of *deliberate* contract exceptions
+(e.g. the scheduler's sanctioned per-tick blocking transfer, the
+``tick_time`` profiling reads). Each entry carries a ``reason`` so
+review can judge the exception on its own text, and matches findings by
+``(rule, path, stripped source line)`` — line-number independent, so
+unrelated edits that shift code don't invalidate it, while *changing*
+a baselined line surfaces it again for re-review. ``count`` caps how
+many identical occurrences one entry covers (duplicating a baselined
+sin on a new line is a new finding).
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding
+
+BASELINE_NAME = ".repro-lint-baseline.json"
+
+
+def default_baseline_path() -> Path:
+    """The checked-in baseline at the repo root (three levels above this
+    package: src/repro/analysis -> repo)."""
+    return Path(__file__).resolve().parents[3] / BASELINE_NAME
+
+
+def load(path: Path) -> List[Dict]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text(encoding="utf-8"))
+    entries = data["entries"] if isinstance(data, dict) else data
+    for e in entries:
+        e.setdefault("count", 1)
+        e.setdefault("reason", "")
+    return entries
+
+
+def save(path: Path, entries: List[Dict]) -> None:
+    entries = sorted(entries, key=lambda e: (e["path"], e["rule"],
+                                             e.get("code", "")))
+    payload = {
+        "comment": ("grandfathered repro-lint findings; every entry "
+                    "needs a justifying `reason` — see "
+                    "src/repro/analysis/baseline.py"),
+        "entries": entries,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n", encoding="utf-8")
+
+
+def from_findings(findings: List[Finding],
+                  reason: str = "TODO: justify") -> List[Dict]:
+    """Collapse findings into baseline entries (one per identity key,
+    with a count). Used by ``--write-baseline``."""
+    counts: Counter = Counter(f.key() for f in findings)
+    return [{"rule": rule, "path": p, "code": code, "count": n,
+             "reason": reason}
+            for (rule, p, code), n in sorted(counts.items())]
+
+
+def partition(findings: List[Finding], entries: List[Dict]
+              ) -> Tuple[List[Finding], List[Finding], List[Dict]]:
+    """Split findings into (new, baselined) and return the stale
+    baseline entries that matched nothing (fixed violations whose
+    entries should be deleted)."""
+    budget: Counter = Counter()
+    for e in entries:
+        budget[(e["rule"], e["path"], e.get("code", ""))] += e["count"]
+    used: Counter = Counter()
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        if used[f.key()] < budget.get(f.key(), 0):
+            used[f.key()] += 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale = [e for e in entries
+             if used.get((e["rule"], e["path"], e.get("code", "")), 0) == 0]
+    return new, old, stale

@@ -1,0 +1,128 @@
+"""repro-lint CLI: ``python -m repro.analysis [options] paths...``.
+
+Exit status: 0 when every finding is baselined (or none), 1 when any
+new finding exists, 2 on usage errors. ``--format=github`` emits
+workflow annotations so the CI lint job pins findings to PR lines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import textwrap
+from pathlib import Path
+from typing import List
+
+from repro.analysis import baseline as baseline_lib
+from repro.analysis.core import Finding, all_rules, analyze_paths
+
+
+def _fmt_text(f: Finding, note: str = "") -> str:
+    tag = f" [{note}]" if note else ""
+    return (f"{f.path}:{f.line}:{f.col + 1}: {f.severity}: "
+            f"{f.rule}: {f.message}{tag}")
+
+
+def _fmt_github(f: Finding) -> str:
+    level = "error" if f.severity == "error" else "warning"
+    # '::' and newlines would terminate the annotation command early
+    msg = f.message.replace("\n", " ").replace("::", ":")
+    return (f"::{level} file={f.path},line={f.line},"
+            f"col={f.col + 1},title=repro-lint {f.rule}::{msg}")
+
+
+def _explain(which: str) -> int:
+    rules = all_rules()
+    targets = sorted(rules) if which == "all" else [which]
+    if which != "all" and which not in rules:
+        print(f"unknown rule `{which}`; known: {', '.join(sorted(rules))}",
+              file=sys.stderr)
+        return 2
+    for i, rid in enumerate(targets):
+        rule = rules[rid]
+        if i:
+            print()
+        print(f"{rid} ({rule.severity})")
+        print(f"  contract: {rule.contract}")
+        print("  rationale:")
+        print(textwrap.indent(textwrap.fill(rule.rationale, width=72),
+                              "    "))
+        if rule.example:
+            print("  violating example:")
+            print(textwrap.indent(rule.example.rstrip(), "    "))
+        print("  suppress one site: "
+              f"# repro-lint: disable={rid}  (say why)")
+    return 0
+
+
+def main(argv: List[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: contract-aware static analysis "
+                    "(DESIGN.md 'Static contracts & repro-lint')")
+    parser.add_argument("paths", nargs="*",
+                        help="files/directories to analyze "
+                             "(default: src benchmarks examples)")
+    parser.add_argument("--format", choices=("text", "json", "github"),
+                        default="text")
+    parser.add_argument("--baseline", type=Path,
+                        default=baseline_lib.default_baseline_path(),
+                        help="baseline file (default: repo root "
+                             f"{baseline_lib.BASELINE_NAME})")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report every finding, baselined or not")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="grandfather all current findings into the "
+                             "baseline file (entries get a TODO reason "
+                             "to fill in) and exit 0")
+    parser.add_argument("--explain", metavar="RULE",
+                        help="print a rule's contract, rationale and a "
+                             "minimal violating example ('all' for the "
+                             "whole catalogue)")
+    parser.add_argument("--root", type=Path, default=Path.cwd(),
+                        help="path findings are reported relative to")
+    args = parser.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+
+    paths = args.paths or ["src", "benchmarks", "examples"]
+    findings = analyze_paths(paths, args.root)
+
+    if args.write_baseline:
+        entries = baseline_lib.load(args.baseline)
+        new, _, _ = baseline_lib.partition(findings, entries)
+        entries.extend(baseline_lib.from_findings(new))
+        baseline_lib.save(args.baseline, entries)
+        print(f"baselined {len(new)} finding(s) -> {args.baseline} "
+              "(fill in the TODO reasons)")
+        return 0
+
+    if args.no_baseline:
+        new, old = findings, []
+    else:
+        new, old, stale = baseline_lib.partition(
+            findings, baseline_lib.load(args.baseline))
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) | {"baselined": False} for f in new]
+            + [vars(f) | {"baselined": True} for f in old],
+            "new": len(new), "baselined": len(old),
+        }, indent=1, default=str))
+    elif args.format == "github":
+        for f in new:
+            print(_fmt_github(f))
+        if new:
+            print(f"repro-lint: {len(new)} new finding(s) "
+                  f"({len(old)} baselined)")
+    else:
+        for f in new:
+            print(_fmt_text(f))
+        print(f"repro-lint: {len(new)} new finding(s), "
+              f"{len(old)} baselined, over {len(paths)} path(s)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

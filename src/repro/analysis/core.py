@@ -1,0 +1,216 @@
+"""repro-lint core: findings, the rule registry, suppressions, and the
+per-file analysis driver.
+
+The repo's reproducibility story rests on a handful of *hard contracts*
+(token-for-token replay from the submission RNG, one blocking transfer
+per scheduler tick, donation-safe call sites, ``interpret=None`` kernel
+entry points, refcount/pin pairing, the streaming strategy protocol).
+They live in prose (DESIGN.md) and are policed by whichever test happens
+to exercise a violating path — this package checks them statically on
+every file instead. Each contract is one :class:`Rule`; rules walk a
+shared per-file :class:`FileContext` (source, AST, parent links,
+enclosing-function map) and yield :class:`Finding`s.
+
+Escape hatches, in order of preference:
+
+* fix the violation;
+* suppress one site inline with ``# repro-lint: disable=<rule>[,<rule>]``
+  on the flagged line (or ``disable-next-line=`` on the line above) —
+  the comment should say why;
+* grandfather it in the checked-in baseline (:mod:`repro.analysis
+  .baseline`) with a justifying ``reason``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Type
+
+SEVERITIES = ("error", "warning")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-next-line)?)\s*=\s*"
+    r"([A-Za-z0-9_,\-\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str                  # rule id, e.g. "sync-discipline"
+    path: str                  # repo-relative posix path
+    line: int                  # 1-based
+    col: int                   # 0-based
+    message: str
+    severity: str = "error"
+    code: str = ""             # stripped source line (baseline fingerprint)
+
+    def key(self):
+        """Line-number-independent identity used for baseline matching:
+        a baselined finding survives unrelated edits that shift it."""
+        return (self.rule, self.path, self.code)
+
+
+class FileContext:
+    """Everything a rule needs about one file: source, AST, parent map,
+    and the repo-relative path rules scope themselves on."""
+
+    def __init__(self, relpath: str, source: str,
+                 tree: Optional[ast.AST] = None):
+        self.relpath = relpath.replace("\\", "/")
+        self.parts = tuple(self.relpath.split("/"))
+        self.name = self.parts[-1]
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    # ------------------------------------------------------------ helpers
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def qualname(self, node: ast.AST) -> str:
+        """Dotted class/function path of the scope containing ``node``
+        (empty string at module level)."""
+        names = [anc.name for anc in self.ancestors(node)
+                 if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef))]
+        return ".".join(reversed(names))
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def in_path(self, *fragments: str) -> bool:
+        """True if every fragment appears as a path component (or the
+        final filename). Component-based so fixture trees in test tmp
+        dirs scope exactly like the real repo layout."""
+        return all(f in self.parts for f in fragments)
+
+
+class Rule:
+    """Base class: subclasses set the metadata and implement check()."""
+
+    id: str = ""
+    severity: str = "error"
+    contract: str = ""         # one-line statement of the invariant
+    rationale: str = ""        # --explain body: why the contract exists
+    example: str = ""          # --explain body: minimal violating snippet
+
+    def applies(self, ctx: FileContext) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ helpers
+
+    def finding(self, ctx: FileContext, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(rule=self.id, path=ctx.relpath,
+                       line=node.lineno, col=node.col_offset,
+                       message=message, severity=self.severity,
+                       code=ctx.line_text(node.lineno))
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator adding a rule (by id) to the global registry."""
+    assert cls.id, f"rule {cls.__name__} has no id"
+    assert cls.severity in SEVERITIES, cls.severity
+    assert cls.id not in _REGISTRY, f"duplicate rule id {cls.id}"
+    _REGISTRY[cls.id] = cls()
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    # importing the rule modules populates the registry
+    from repro.analysis import rules  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def suppressed_lines(source: str) -> Dict[int, set]:
+    """Map 1-based line number -> set of rule ids suppressed there via
+    ``# repro-lint: disable=...`` (same line) or ``disable-next-line=``
+    (the line above the flagged one)."""
+    out: Dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        target = i + 1 if m.group(1) == "disable-next-line" else i
+        ids = {p.strip() for p in m.group(2).split(",") if p.strip()}
+        out.setdefault(target, set()).update(ids)
+    return out
+
+
+def analyze_source(source: str, relpath: str,
+                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run rules over one in-memory file. Parse failures come back as a
+    single synthetic ``parse-error`` finding instead of raising, so one
+    broken file can't hide the rest of a run's findings."""
+    try:
+        ctx = FileContext(relpath, source)
+    except SyntaxError as e:
+        return [Finding(rule="parse-error", path=relpath,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"could not parse: {e.msg}",
+                        code="")]
+    if rules is None:
+        rules = list(all_rules().values())
+    suppressed = suppressed_lines(source)
+    findings: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(ctx):
+            continue
+        for f in rule.check(ctx):
+            if f.rule in suppressed.get(f.line, ()):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def iter_python_files(paths: Sequence[str], root: Path) -> Iterator[Path]:
+    for p in paths:
+        path = (root / p) if not Path(p).is_absolute() else Path(p)
+        if path.is_file() and path.suffix == ".py":
+            yield path
+        elif path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+
+
+def analyze_paths(paths: Sequence[str], root: Path,
+                  rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Analyze every ``*.py`` under ``paths`` (resolved against
+    ``root``); finding paths are reported relative to ``root``."""
+    findings: List[Finding] = []
+    for file in iter_python_files(paths, root):
+        try:
+            rel = file.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = file.as_posix()
+        findings.extend(
+            analyze_source(file.read_text(encoding="utf-8"), rel, rules))
+    return findings

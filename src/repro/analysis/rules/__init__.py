@@ -1,0 +1,10 @@
+"""Rule modules: importing this package registers every rule.
+
+R1 replay-determinism, R2 sync-discipline  -> determinism.py
+R3 donation-safety, R4 interpret-default,
+R5 traced-branch,   R8 jit-key-hygiene     -> jax_discipline.py
+R6 alloc-pairing,   R7 strategy-protocol   -> serving_contracts.py
+"""
+from repro.analysis.rules import determinism  # noqa: F401
+from repro.analysis.rules import jax_discipline  # noqa: F401
+from repro.analysis.rules import serving_contracts  # noqa: F401

@@ -1,0 +1,520 @@
+"""R3 donation-safety, R4 interpret-default, R5 traced-branch hazard,
+R8 jit-key hygiene.
+
+These four rules police the repo's jit/Pallas conventions:
+
+* donation (PR 2/PR 5): tick steps donate the KV pool so chunk k+1
+  reuses chunk k's buffers — reading a donated operand after the call
+  is use-after-free that XLA only sometimes warns about;
+* ``interpret=None`` resolved via ``interpret_mode()`` (PR 2): kernel
+  wrappers must never hard-default to the Pallas interpreter, or a real
+  TPU silently runs interpreted;
+* Python control flow on traced values fails at trace time (or worse,
+  silently specializes) — branches must use static values or lax.cond;
+* hashable-but-fresh static args (f-strings, dict/tuple literals built
+  per call) make every tick a cache miss — the recompile-storm hazard.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+from repro.analysis.rules.determinism import _dotted
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """One jitted callable discovered in a module."""
+
+    name: str                        # local name it is bound to
+    target: Optional[ast.FunctionDef]  # in-module def being wrapped
+    static_nums: Tuple[int, ...] = ()
+    static_names: Tuple[str, ...] = ()
+    donate_nums: Tuple[int, ...] = ()
+    node: Optional[ast.AST] = None   # where the wrapping happened
+
+
+def _int_tuple(node: Optional[ast.AST]) -> Tuple[int, ...]:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+        return tuple(out)
+    return ()
+
+
+def _str_tuple(node: Optional[ast.AST]) -> Tuple[str, ...]:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(el.value for el in node.elts
+                     if isinstance(el, ast.Constant)
+                     and isinstance(el.value, str))
+    return ()
+
+
+def _jit_call_kwargs(call: ast.Call) -> Optional[Dict[str, ast.AST]]:
+    """If ``call`` is jax.jit(...) / partial(jax.jit, ...), return its
+    keyword map (static_argnums / static_argnames / donate_argnums)."""
+    dotted = _dotted(call.func)
+    inner = None
+    if dotted in ("jax.jit", "jit", "pjit", "jax.pjit"):
+        inner = call
+    elif dotted in ("functools.partial", "partial") and call.args:
+        if _dotted(call.args[0]) in ("jax.jit", "jit", "pjit", "jax.pjit"):
+            inner = call
+    if inner is None:
+        return None
+    return {kw.arg: kw.value for kw in inner.keywords if kw.arg}
+
+
+def collect_jitted(ctx: FileContext) -> List[JitInfo]:
+    """Find module-level jitted callables: ``name = jax.jit(fn, ...)``
+    assignments (fn resolved when defined in this module) and defs
+    decorated with ``@jax.jit`` / ``@partial(jax.jit, ...)``."""
+    defs: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in ast.walk(ctx.tree)
+        if isinstance(n, ast.FunctionDef)}
+    out: List[JitInfo] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            kwargs = _jit_call_kwargs(node.value)
+            if kwargs is None:
+                continue
+            wrapped = node.value.args[0] if node.value.args else None
+            target = None
+            if isinstance(wrapped, ast.Name):
+                target = defs.get(wrapped.id)
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.append(JitInfo(
+                        t.id, target,
+                        _int_tuple(kwargs.get("static_argnums")),
+                        _str_tuple(kwargs.get("static_argnames")),
+                        _int_tuple(kwargs.get("donate_argnums")),
+                        node))
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                kwargs = None
+                if isinstance(dec, ast.Call):
+                    kwargs = _jit_call_kwargs(dec)
+                elif _dotted(dec) in ("jax.jit", "jit"):
+                    kwargs = {}
+                if kwargs is not None:
+                    out.append(JitInfo(
+                        node.name, node,
+                        _int_tuple(kwargs.get("static_argnums")),
+                        _str_tuple(kwargs.get("static_argnames")),
+                        _int_tuple(kwargs.get("donate_argnums")),
+                        node))
+                    break
+    return out
+
+
+def _name_events(fn: ast.AST) -> List[Tuple[int, int, str, str]]:
+    """(line, col, kind, name) for every Name load/store in ``fn``,
+    in source order."""
+    events = []
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name):
+            kind = "store" if isinstance(n.ctx, (ast.Store, ast.Del)) \
+                else "load"
+            events.append((n.lineno, n.col_offset, kind, n.id))
+    events.sort()
+    return events
+
+
+@register
+class DonationSafety(Rule):
+    """R3: a name passed at a donated position must not be read again
+    after the call (unless rebound by the call's own assignment)."""
+
+    id = "donation-safety"
+    severity = "error"
+    contract = ("operands at donate_argnums positions are dead after "
+                "the call — the tick reuses their buffers (PR 2/PR 5)")
+    rationale = (
+        "The fused tick donates the KV pool / aux state so each step "
+        "aliases the previous step's buffers instead of allocating "
+        "(-37% peak memory on the model-step cache alone). XLA is free "
+        "to overwrite a donated buffer the moment the call is issued; "
+        "reading the old Python name afterwards returns garbage (on "
+        "TPU) or silently correct values (CPU interpreter), which is "
+        "exactly the class of bug that passes every CPU test and "
+        "corrupts production decodes. The rule tracks module-level "
+        "`name = jax.jit(fn, donate_argnums=...)` wrappers and flags "
+        "call sites where a donated bare-name operand is loaded again "
+        "later in the same function without an intervening rebind.")
+    example = ("step = jax.jit(f, donate_argnums=(0,))\n"
+               "def tick(cache, tok):\n"
+               "    logits, new_cache = step(cache, tok)\n"
+               "    return logits, cache   # R3: cache was donated\n")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        donating = {j.name: j for j in collect_jitted(ctx) if j.donate_nums}
+        if not donating:
+            return
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            events = None
+            for call in ast.walk(fn):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Name)
+                        and call.func.id in donating):
+                    continue
+                info = donating[call.func.id]
+                # names rebound by the assignment consuming this call
+                # (x = f(x) / a, x = f(x)) are live again immediately
+                rebound = self._assign_targets(ctx, call)
+                for pos in info.donate_nums:
+                    if pos >= len(call.args):
+                        continue
+                    arg = call.args[pos]
+                    if not isinstance(arg, ast.Name) or arg.id in rebound:
+                        continue
+                    if events is None:
+                        events = _name_events(fn)
+                    hit = self._read_after(events, arg.id, call)
+                    if hit is not None:
+                        yield Finding(
+                            rule=self.id, path=ctx.relpath,
+                            line=hit[0], col=hit[1],
+                            message=(
+                                f"`{arg.id}` is read after being donated "
+                                f"to `{call.func.id}` (donate_argnums "
+                                f"position {pos}, call at line "
+                                f"{call.lineno}) — its buffer may "
+                                "already be reused"),
+                            severity=self.severity,
+                            code=ctx.line_text(hit[0]))
+
+    @staticmethod
+    def _assign_targets(ctx: FileContext, call: ast.Call) -> Set[str]:
+        names: Set[str] = set()
+        for anc in ctx.ancestors(call):
+            if isinstance(anc, ast.Assign):
+                for t in anc.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            names.add(n.id)
+            elif isinstance(anc, (ast.AugAssign, ast.AnnAssign)):
+                for n in ast.walk(anc.target):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+            elif isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        return names
+
+    @staticmethod
+    def _read_after(events, name: str,
+                    call: ast.Call) -> Optional[Tuple[int, int]]:
+        """First load of ``name`` strictly after the call with no store
+        in between (lexical order — loop back-edges are out of scope)."""
+        call_end = (call.end_lineno or call.lineno,
+                    call.end_col_offset or call.col_offset)
+        for line, col, kind, nm in events:
+            if nm != name or (line, col) <= call_end:
+                continue
+            if kind == "store":
+                return None
+            return (line, col)
+        return None
+
+
+@register
+class InterpretDefault(Rule):
+    """R4: kernel wrappers declare ``interpret=None`` and resolve it via
+    ``interpret_mode()``; no hard-coded interpret constants at call
+    sites."""
+
+    id = "interpret-default"
+    severity = "error"
+    contract = ("Pallas wrapper entry points take interpret=None and "
+                "resolve via repro.kernels.interpret_mode() (PR 2)")
+    rationale = (
+        "interpret=True runs the Pallas *interpreter* — orders of "
+        "magnitude slower and numerically laxer than the compiled "
+        "kernel. The PR 2 convention: public kernel entry points "
+        "default interpret=None and resolve it with interpret_mode() "
+        "(compiled on a real TPU backend, interpreter elsewhere), so "
+        "callers bypassing ops.py can never silently interpret on "
+        "hardware. A def with interpret=True/False, an interpret=None "
+        "def that never consults interpret_mode(), or a hard-coded "
+        "interpret=True/False at a call site all reintroduce the "
+        "pre-PR 2 failure mode.")
+    example = ("def my_kernel(x, interpret=True):   # R4: not None\n"
+               "    return pl.pallas_call(body, ..., interpret=interpret)"
+               "(x)\n")
+
+    def applies(self, ctx: FileContext) -> bool:
+        # defs are checked in kernels/; hard-coded call-site constants
+        # are a hazard everywhere outside tests
+        return "tests" not in ctx.parts
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        in_kernels = ctx.in_path("kernels")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef) and in_kernels \
+                    and not node.name.startswith("_"):
+                yield from self._check_def(ctx, node)
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" \
+                            and isinstance(kw.value, ast.Constant) \
+                            and isinstance(kw.value.value, bool):
+                        yield self.finding(
+                            ctx, node,
+                            f"hard-coded `interpret={kw.value.value}` at "
+                            "a call site — pass nothing (wrapper "
+                            "resolves via interpret_mode()) or thread a "
+                            "caller-provided value")
+
+    def _check_def(self, ctx: FileContext,
+                   node: ast.FunctionDef) -> Iterable[Finding]:
+        args = node.args
+        all_args = args.posonlyargs + args.args + args.kwonlyargs
+        if not any(a.arg == "interpret" for a in all_args):
+            return
+        defaults = dict(
+            zip([a.arg for a in args.posonlyargs + args.args]
+                [-len(args.defaults):] if args.defaults else [],
+                args.defaults))
+        defaults.update({a.arg: d for a, d in
+                         zip(args.kwonlyargs, args.kw_defaults)
+                         if d is not None})
+        dflt = defaults.get("interpret")
+        if dflt is None:
+            # no default: callers must always decide — allowed only for
+            # private jit helpers, which the name filter already skips
+            yield self.finding(
+                ctx, node,
+                f"public kernel entry `{node.name}` takes `interpret` "
+                "without a default — declare interpret=None and resolve "
+                "via interpret_mode()")
+            return
+        if not (isinstance(dflt, ast.Constant) and dflt.value is None):
+            yield self.finding(
+                ctx, node,
+                f"`{node.name}` defaults interpret="
+                f"{getattr(dflt, 'value', '<expr>')} — must default to "
+                "None and resolve via interpret_mode() (PR 2 convention)")
+            return
+        uses_mode = any(isinstance(n, (ast.Name, ast.Attribute))
+                        and (getattr(n, "id", None) == "interpret_mode"
+                             or getattr(n, "attr", None) == "interpret_mode")
+                        for n in ast.walk(node))
+        if not uses_mode:
+            yield self.finding(
+                ctx, node,
+                f"`{node.name}` declares interpret=None but never "
+                "resolves it via interpret_mode() — None would reach "
+                "pl.pallas_call unresolved")
+
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+@register
+class TracedBranch(Rule):
+    """R5: Python if/while/assert on values derived from traced
+    arguments inside jitted function bodies."""
+
+    id = "traced-branch"
+    severity = "error"
+    contract = ("jitted bodies branch only on static values; traced "
+                "values use lax.cond/where (jax tracing semantics)")
+    rationale = (
+        "Inside jax.jit, Python `if`/`while`/`assert` on a traced value "
+        "raises TracerBoolConversionError at best; at worst (when the "
+        "value is concrete during tracing, e.g. under the Pallas "
+        "interpreter on CPU) it silently bakes one branch into the "
+        "compiled program — a bug CPU tests cannot see. Branching on "
+        "`.shape`/`.ndim`/`.dtype`, `len(...)`, `isinstance(...)`, or "
+        "`is None` is static at trace time and exempt; static_argnums/"
+        "static_argnames parameters are exempt by name.")
+    example = ("@jax.jit\n"
+               "def step(state, x):\n"
+               "    if x > 0:        # R5: traced value in Python branch\n"
+               "        return state + x\n"
+               "    return state\n")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for info in collect_jitted(ctx):
+            fn = info.target
+            if fn is None:
+                continue
+            params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+            static = set(info.static_names)
+            static.update(params[i] for i in info.static_nums
+                          if i < len(params))
+            traced = {p for p in params if p not in static}
+            traced.update(a.arg for a in fn.args.kwonlyargs
+                          if a.arg not in static)
+            traced.discard("self")
+            if not traced:
+                continue
+            tainted = self._propagate(fn, traced)
+            for stmt in ast.walk(fn):
+                test = None
+                if isinstance(stmt, (ast.If, ast.While)):
+                    test = stmt.test
+                elif isinstance(stmt, ast.Assert):
+                    test = stmt.test
+                if test is None:
+                    continue
+                name = self._tainted_use(test, tainted)
+                if name:
+                    kind = type(stmt).__name__.lower()
+                    yield self.finding(
+                        ctx, stmt,
+                        f"Python `{kind}` on `{name}`, derived from a "
+                        f"traced argument of jitted `{fn.name}` — use "
+                        "lax.cond/jnp.where or make it static")
+
+    @staticmethod
+    def _propagate(fn: ast.AST, traced: Set[str]) -> Set[str]:
+        """Names assigned from expressions mentioning tainted names
+        (two passes are enough for straight-line derivations)."""
+        tainted = set(traced)
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    src_names = {n.id for n in ast.walk(node.value)
+                                 if isinstance(n, ast.Name)}
+                    if src_names & tainted \
+                            and not TracedBranch._is_exempt_expr(node.value):
+                        for t in node.targets:
+                            for n in ast.walk(t):
+                                if isinstance(n, ast.Name):
+                                    tainted.add(n.id)
+        return tainted
+
+    @staticmethod
+    def _is_exempt_expr(node: ast.AST) -> bool:
+        """Whole-expression exemption: pure shape/dtype/len derivations
+        stay static at trace time."""
+        names = [n for n in ast.walk(node) if isinstance(n, ast.Name)]
+        if not names:
+            return True
+        exempt_spans = TracedBranch._exempt_name_spans(node)
+        return all(id(n) in exempt_spans for n in names)
+
+    @staticmethod
+    def _exempt_name_spans(root: ast.AST) -> Set[int]:
+        """ids of Name nodes appearing only inside static accessors:
+        x.shape / x.ndim / x.dtype / x.size, len(x), isinstance(x, T),
+        `x is None` comparisons."""
+        exempt: Set[int] = set()
+        for node in ast.walk(root):
+            inner = None
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in _SHAPE_ATTRS:
+                inner = node.value
+            elif isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d in ("len", "isinstance", "getattr", "hasattr",
+                         "type"):
+                    inner = node
+            elif isinstance(node, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops):
+                inner = node
+            if inner is not None:
+                for n in ast.walk(inner):
+                    if isinstance(n, ast.Name):
+                        exempt.add(id(n))
+        return exempt
+
+    def _tainted_use(self, test: ast.AST, tainted: Set[str]) -> str:
+        exempt = self._exempt_name_spans(test)
+        for n in ast.walk(test):
+            if isinstance(n, ast.Name) and n.id in tainted \
+                    and id(n) not in exempt:
+                return n.id
+        return ""
+
+
+@register
+class JitKeyHygiene(Rule):
+    """R8: per-call-fresh literals (f-strings, dict/list literals,
+    non-constant tuples, comprehensions) flowing into jit static args
+    in the tick path — every call becomes a cache miss."""
+
+    id = "jit-key-hygiene"
+    severity = "error"
+    contract = ("static args of tick-path jitted callables are stable "
+                "Python values, never per-call-built literals "
+                "(recompile-storm hazard)")
+    rationale = (
+        "A jit cache key includes every static argument by equality. "
+        "Passing an f-string, a dict/list, or a tuple rebuilt from "
+        "per-request Python values at a tick-path call site makes the "
+        "key unique (or unhashable) per call: the scheduler then "
+        "retraces EVERY tick, which reads as a 100x throughput collapse "
+        "rather than an error. The fused-tick keys are deliberately "
+        "coarse (cfg object, chunk-extent multiset); new static args "
+        "must be equally stable.")
+    example = ("step = jax.jit(f, static_argnums=(1,))\n"
+               "def tick(self, x):\n"
+               "    # R8: fresh string per tick -> retrace per tick\n"
+               "    return step(x, f\"rows={len(self.active)}\")\n")
+
+    FRESH = (ast.JoinedStr, ast.Dict, ast.List, ast.Set, ast.DictComp,
+             ast.ListComp, ast.SetComp, ast.GeneratorExp)
+
+    def applies(self, ctx: FileContext) -> bool:
+        return (ctx.name in ("engine.py", "scheduler.py", "strategies.py",
+                             "sampler.py") and ctx.in_path("serving")) \
+            or (ctx.name == "kappa.py" and ctx.in_path("core"))
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        jitted = {j.name: j for j in collect_jitted(ctx)
+                  if j.static_nums or j.static_names}
+        if not jitted:
+            return
+        for call in ast.walk(ctx.tree):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in jitted):
+                continue
+            info = jitted[call.func.id]
+            spots = [(f"position {i}", call.args[i])
+                     for i in info.static_nums if i < len(call.args)]
+            spots += [(f"name `{kw.arg}`", kw.value)
+                      for kw in call.keywords
+                      if kw.arg in info.static_names]
+            for where, arg in spots:
+                why = self._fresh(arg)
+                if why:
+                    yield self.finding(
+                        ctx, arg,
+                        f"static arg ({where}) of jitted "
+                        f"`{call.func.id}` is {why} — a fresh jit key "
+                        "every call (recompile storm); hoist a stable "
+                        "value instead")
+
+    def _fresh(self, node: ast.AST) -> str:
+        if isinstance(node, ast.JoinedStr):
+            return "an f-string built per call"
+        if isinstance(node, (ast.Dict, ast.DictComp)):
+            return "a dict literal (unhashable as a jit key)"
+        if isinstance(node, (ast.List, ast.ListComp, ast.Set,
+                             ast.SetComp, ast.GeneratorExp)):
+            return "an unhashable/per-call literal"
+        if isinstance(node, ast.Tuple) and any(
+                not isinstance(el, ast.Constant) for el in node.elts):
+            return "a tuple rebuilt from per-call values"
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "str", "repr", "format"):
+            return "a string built per call"
+        return ""

@@ -1,0 +1,306 @@
+"""R6 allocator pairing and R7 strategy conformance.
+
+* The page pool's refcount/pin machinery (PR 4/PR 6) is leak-checked at
+  run teardown, but a leak on an *early-return path* only fires when a
+  test happens to drive that path. R6 enumerates a function's
+  control-flow paths and flags acquire/release pairs that balance on
+  some paths and leak on others.
+* The streaming scheduler (PR 8) emits only tokens the strategy has
+  *committed* via ``decided_branch``; a new strategy that forgets to
+  implement it (or ``step``) degrades silently — streams emit nothing
+  until the terminal flush. R7 checks strategy subclasses implement the
+  protocol.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import FileContext, Finding, Rule, register
+
+# acquire-side call name -> release-side call name. Matched on the
+# called attribute/function NAME (any receiver), inside one function.
+PAIRS = (
+    ("pin_page", "unpin_page"),      # radix prefix cache pins (PR 6)
+    ("acquire", "release"),          # pooled-controller slots (PR 3)
+    ("alloc_row", "free_row"),       # page-pool row block tables (PR 2)
+    ("alloc_pages", "free_pages"),   # raw page grants
+)
+
+_MAX_PATHS = 64
+
+
+def _call_name(node: ast.Call) -> str:
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    return ""
+
+
+class _PathWalker:
+    """Enumerate simplified control-flow paths of one function body and
+    the (acquire - release) balance each pair accumulates along them.
+    Loops run 0 or 1 times; ``try`` bodies and handlers are alternate
+    paths with ``finally`` appended to all; explicit return/raise ends a
+    path. Path count is capped — functions beyond the cap are skipped
+    (soundness over noise)."""
+
+    def __init__(self):
+        self.overflow = False
+
+    def paths(self, stmts: List[ast.stmt]) -> List[Tuple[Tuple[int, ...],
+                                                         bool]]:
+        """Returns [(balances, terminated)] per path; ``balances`` is a
+        per-pair net count."""
+        live = [(tuple(0 for _ in PAIRS), False)]
+        for stmt in stmts:
+            nxt = []
+            for bal, done in live:
+                if done:
+                    nxt.append((bal, done))
+                    continue
+                for b2, d2 in self._stmt(stmt):
+                    nxt.append((self._add(bal, b2), d2))
+            live = self._dedup(nxt)
+            if self.overflow:
+                return live
+        return live
+
+    @staticmethod
+    def _add(a, b):
+        return tuple(x + y for x, y in zip(a, b))
+
+    def _dedup(self, paths):
+        out = list(dict.fromkeys(paths))
+        if len(out) > _MAX_PATHS:
+            self.overflow = True
+            out = out[:_MAX_PATHS]
+        return out
+
+    def _events(self, node: ast.AST) -> Tuple[int, ...]:
+        """Pair balance from every call in an expression/statement,
+        skipping nested function bodies (they run when called, not
+        here)."""
+        bal = [0] * len(PAIRS)
+        for n in self._walk_no_nested(node):
+            if isinstance(n, ast.Call):
+                name = _call_name(n)
+                for i, (acq, rel) in enumerate(PAIRS):
+                    if name == acq:
+                        bal[i] += 1
+                    elif name == rel:
+                        bal[i] -= 1
+        return tuple(bal)
+
+    @staticmethod
+    def _walk_no_nested(node: ast.AST):
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            yield n
+            for c in ast.iter_child_nodes(n):
+                if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                    continue
+                stack.append(c)
+
+    def _stmt(self, stmt: ast.stmt) -> List[Tuple[Tuple[int, ...], bool]]:
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            return [(self._events(stmt), True)]
+        if isinstance(stmt, (ast.Break, ast.Continue)):
+            return [(tuple(0 for _ in PAIRS), True)]
+        if isinstance(stmt, ast.If):
+            test = self._events(stmt.test)
+            out = []
+            for branch in (stmt.body, stmt.orelse):
+                for bal, done in self.paths(branch) if branch \
+                        else [(tuple(0 for _ in PAIRS), False)]:
+                    out.append((self._add(test, bal), done))
+            return self._dedup(out)
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            head = self._events(stmt.iter if isinstance(
+                stmt, (ast.For, ast.AsyncFor)) else stmt.test)
+            out = [(head, False)]                      # zero iterations
+            for bal, done in self.paths(stmt.body):    # one iteration
+                out.append((self._add(head, bal), done))
+            for i in range(len(out)):                  # loop else-clause
+                bal, done = out[i]
+                if not done and stmt.orelse:
+                    for bal2, done2 in self.paths(stmt.orelse):
+                        out.append((self._add(bal, bal2), done2))
+            return self._dedup(out)
+        if isinstance(stmt, ast.Try):
+            out = []
+            alternates = [stmt.body] + [h.body for h in stmt.handlers]
+            for block in alternates:
+                for bal, done in self.paths(block):
+                    out.append((bal, done))
+            if stmt.orelse:
+                grown = []
+                for bal, done in out:
+                    if done:
+                        grown.append((bal, done))
+                    else:
+                        for bal2, done2 in self.paths(stmt.orelse):
+                            grown.append((self._add(bal, bal2), done2))
+                out = grown
+            if stmt.finalbody:
+                grown = []
+                for bal, done in out:
+                    for bal2, done2 in self.paths(stmt.finalbody):
+                        grown.append((self._add(bal, bal2),
+                                      done or done2))
+                out = grown
+            return self._dedup(out)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            head = tuple(sum(x) for x in zip(
+                *[self._events(item) for item in stmt.items])) \
+                if stmt.items else tuple(0 for _ in PAIRS)
+            return self._dedup([(self._add(head, bal), done)
+                                for bal, done in self.paths(stmt.body)])
+        return [(self._events(stmt), False)]
+
+
+@register
+class AllocPairing(Rule):
+    """R6: acquire/release pairs that balance on some control-flow paths
+    of a function but leak on others."""
+
+    id = "alloc-pairing"
+    severity = "error"
+    contract = ("pin_page/unpin_page, acquire/release, alloc/free calls "
+                "pair on every control-flow path of a function that "
+                "uses both sides (PR 4/PR 6 refcount invariants)")
+    rationale = (
+        "The allocator's invariant — ref == table refs + pins, zero "
+        "leaks at quiescence — is asserted at run teardown, so a leak "
+        "on an early-return or exception path surfaces only when a test "
+        "drives that exact path under pressure. If a function both "
+        "acquires and releases a resource, every path through it should "
+        "balance; a path that returns between the acquire and the "
+        "release (without try/finally) leaks pages that preemption can "
+        "never reclaim. Functions that only acquire (ownership handed "
+        "to a structure, e.g. radix pins) or only release (teardown "
+        "helpers) are exempt — pairing across functions is the "
+        "allocator harness's job.")
+    example = ("def grow(self, alloc, n):\n"
+               "    pages = alloc.alloc_row(row, n)\n"
+               "    if not self._fits(pages):\n"
+               "        return None        # R6: leaks on this path\n"
+               "    ...\n"
+               "    alloc.free_row(row)\n")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            names = {_call_name(n) for n in ast.walk(fn)
+                     if isinstance(n, ast.Call)}
+            active = [i for i, (acq, rel) in enumerate(PAIRS)
+                      if acq in names and rel in names]
+            if not active:
+                continue
+            walker = _PathWalker()
+            paths = walker.paths(fn.body)
+            if walker.overflow:
+                continue
+            for i in active:
+                bals = [bal[i] for bal, _ in paths]
+                if any(b == 0 for b in bals) and any(b > 0 for b in bals):
+                    acq, rel = PAIRS[i]
+                    yield self.finding(
+                        ctx, fn,
+                        f"`{fn.name}` pairs {acq}/{rel} on some paths "
+                        f"but leaks {max(bals)} acquisition(s) on "
+                        "another (early return/raise between acquire "
+                        "and release?) — balance every path or move the "
+                        "release to a finally block")
+
+
+@register
+class StrategyProtocol(Rule):
+    """R7: concrete DecodeStrategy subclasses implement the full
+    protocol, including the PR 8 streaming contract ``decided_branch``."""
+
+    id = "strategy-protocol"
+    severity = "error"
+    contract = ("DecodeStrategy subclasses implement step() and "
+                "decided_branch() (streaming commit contract, "
+                "DESIGN.md §9)")
+    rationale = (
+        "The scheduler streams a request's tokens only from the branch "
+        "its strategy has COMMITTED via decided_branch() — that is what "
+        "keeps every streamed prefix a prefix of the final result. The "
+        "base class defaults are deliberately conservative: step() "
+        "raises, decided_branch() returns None (nothing streams until "
+        "the terminal flush). A new strategy that forgets either "
+        "doesn't fail any batch test — it just silently never streams, "
+        "or dies on first pool use. Subclasses of a concrete in-module "
+        "strategy inherit its implementations and are exempt.")
+    example = ("class MyStrategy(DecodeStrategy):\n"
+               "    name = 'mine'\n"
+               "    # R7: neither step() nor decided_branch() defined\n"
+               "    def choose(self, branch_ids, done):\n"
+               "        return int(branch_ids[0])\n")
+
+    BASE = "DecodeStrategy"
+    REQUIRED = ("step", "decided_branch")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        classes: Dict[str, ast.ClassDef] = {
+            n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.ClassDef)}
+
+        def base_names(cls: ast.ClassDef) -> List[str]:
+            out = []
+            for b in cls.bases:
+                if isinstance(b, ast.Name):
+                    out.append(b.id)
+                elif isinstance(b, ast.Attribute):
+                    out.append(b.attr)
+            return out
+
+        def chain(cls: ast.ClassDef, seen: Set[str]) -> List[ast.ClassDef]:
+            """In-module ancestor chain, excluding the protocol base."""
+            out = [cls]
+            for b in base_names(cls):
+                if b == self.BASE or b in seen or b not in classes:
+                    continue
+                seen.add(b)
+                out.extend(chain(classes[b], seen))
+            return out
+
+        for cls in classes.values():
+            if cls.name == self.BASE or cls.name.startswith("_"):
+                continue
+            bases = base_names(cls)
+            mro = chain(cls, {cls.name})
+            is_strategy = self.BASE in bases or any(
+                self.BASE in base_names(c) for c in mro[1:])
+            if not is_strategy:
+                continue
+            # abstract intermediates (no `name` attribute anywhere in
+            # the chain) aren't registered; concrete ones must conform
+            defined: Set[str] = set()
+            has_name = False
+            for c in mro:
+                for stmt in c.body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        defined.add(stmt.name)
+                    elif isinstance(stmt, ast.Assign):
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                defined.add(t.id)
+                                has_name |= t.id == "name"
+            if not has_name:
+                continue
+            missing = [m for m in self.REQUIRED if m not in defined]
+            if missing:
+                yield self.finding(
+                    ctx, cls,
+                    f"strategy `{cls.name}` does not implement "
+                    f"{', '.join(missing)} — the scheduler needs "
+                    "step() for decode and decided_branch() for the "
+                    "streaming commit contract (DESIGN.md §9)")

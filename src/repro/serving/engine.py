@@ -136,7 +136,7 @@ def prefill_chunked(params, cfg: ModelConfig, prompt: np.ndarray,
     cache = init_cache(cfg, 1, max_seq)
     logits = None
     for s in range(0, len(prompt), chunk):
-        piece = np.asarray(prompt[s:s + chunk])
+        piece = prompt[s:s + chunk]
         logits, cache, _ = _prefill_chunk_contig(
             params, cfg, jnp.asarray(piece)[None],
             jnp.full((1,), s, jnp.int32), s, cache)

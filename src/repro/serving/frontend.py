@@ -144,6 +144,9 @@ class ServingFrontend:
     def _tick_loop_thread(self) -> None:
         while not self._stop:
             if not self._tick_once():
+                # idle pacing of a live OS thread: wall-clock by nature,
+                # never observable in tokens (replay is RNG-driven)
+                # repro-lint: disable-next-line=replay-determinism
                 time.sleep(self.idle_sleep_s)
 
     # ------------------------------------------------------------- events
@@ -267,14 +270,21 @@ class ServingFrontend:
 
     def join(self, timeout_s: Optional[float] = None) -> None:
         """Sync twin of :meth:`drain`."""
-        deadline = None if timeout_s is None \
-            else time.monotonic() + timeout_s
+        # join() guards a LIVE thread against hanging: the timeout must
+        # follow real wall-clock even when the scheduler runs on a fake
+        # clock, and the pacing sleep yields the GIL to the tick thread
+        deadline = None
+        if timeout_s is not None:
+            # repro-lint: disable-next-line=replay-determinism
+            deadline = time.monotonic() + timeout_s
         while True:
             with self._lock:
                 if not self.sched.has_work:
                     return
+            # repro-lint: disable-next-line=replay-determinism
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("scheduler still has work")
+            # repro-lint: disable-next-line=replay-determinism
             time.sleep(self.idle_sleep_s)
 
     def snapshot(self, reset_window: bool = False) -> Dict:

@@ -1226,7 +1226,7 @@ class ContinuousBatchingScheduler(_SchedulerBase):
     def _prefill_step(self, pf: _Prefill):
         plen = len(pf.item.prompt)
         c = min(self.prefill_chunk, plen - pf.filled)
-        piece = np.asarray(pf.item.prompt[pf.filled:pf.filled + c])
+        piece = pf.item.prompt[pf.filled:pf.filled + c]
         logits, pf.cache1, _ = engine._prefill_chunk_contig(
             self.params, self.cfg, jnp.asarray(piece)[None],
             jnp.full((1,), pf.filled, jnp.int32), pf.filled, pf.cache1)
@@ -1630,7 +1630,7 @@ class PagedScheduler(_SchedulerBase):
         with the filled prompt, not max_seq), and the physical page of
         every chunk token."""
         item, s0 = pf.item, pf.slots[0]
-        piece = np.asarray(item.prompt[pf.filled:pf.filled + c])
+        piece = item.prompt[pf.filled:pf.filled + c]
         qpos = np.arange(pf.filled, pf.filled + c)
         cpages = self.alloc.block[s0][qpos // self.page_size]
         need = self.alloc.pages_for(pf.filled + c)
@@ -1812,7 +1812,7 @@ class PagedScheduler(_SchedulerBase):
         (:meth:`_winner_extent`) only the prompt pages are published."""
         if self.pcache is None or item is None or not slots:
             return
-        prompt = np.asarray(item.prompt)
+        prompt = item.prompt    # already a host ndarray (submit())
         idx = self._winner_extent(rs)
         if idx is None:
             self._publish_prompt_pages(prompt, slots[0], len(prompt))

@@ -495,8 +495,11 @@ class KappaStrategy(DecodeStrategy):
             self.state = _kappa_controller(self._local_state(), logits,
                                            jnp.asarray(out_tokens),
                                            self.log_q, kcfg)
-            alive = np.asarray(self.state.alive)
-            traj = np.asarray(self.state.traj)
+            # ONE fused blocking transfer for both controller outputs —
+            # the local-path twin of the pooled tick's single device_get
+            # repro-lint: disable-next-line=sync-discipline
+            alive, traj = jax.device_get((self.state.alive,
+                                          self.state.traj))
         # ~done_prev: a branch's own EOS-emitting step is logged/counted,
         # the same accounting greedy and BoN use
         counted = alive & ~done_prev
@@ -530,7 +533,9 @@ class KappaStrategy(DecodeStrategy):
             return (self.pool.alive[self.slot][self.ctrl_rows],
                     self.pool.traj[self.slot][self.ctrl_rows])
         st = self._local_state()
-        return np.asarray(st.alive), np.asarray(st.traj)
+        # one fused transfer instead of two sequential blocking reads
+        # repro-lint: disable-next-line=sync-discipline
+        return jax.device_get((st.alive, st.traj))
 
     def choose(self, branch_ids, done):
         alive, traj = self._alive_traj()
@@ -552,8 +557,9 @@ class KappaStrategy(DecodeStrategy):
             traj = self.pool.traj[self.slot][self.ctrl_rows]
         else:
             st = self._local_state()
-            cutoff = int(np.asarray(st.cutoff))
-            traj = np.asarray(st.traj)
+            # repro-lint: disable-next-line=sync-discipline
+            cut_np, traj = jax.device_get((st.cutoff, st.traj))
+            cutoff = int(cut_np)
         return {"cutoff": cutoff, "traj": traj.tolist()}
 
 

@@ -31,6 +31,51 @@ class FakeClock:
 def fake_clock():
     return FakeClock()
 
+
+# Dynamic twin of repro-lint's static R2 sync-discipline rule: the
+# static allowlist (rules/determinism.py ALLOWED_SYNC_SITES) names the
+# sanctioned blocking-transfer call sites; this guard asserts the
+# runtime counters those sites increment stay within the DESIGN.md §4
+# budget — ≤1 pooled-controller sync per tick riding ≤2 blocking
+# transfers per tick — on EVERY scheduler any scheduler-level test
+# constructs. The two can't drift apart silently: a new sync site
+# trips the lint, a new per-tick transfer trips this.
+_SYNC_GUARDED_FILES = ("test_scheduler.py", "test_paged.py")
+
+
+@pytest.fixture(autouse=True)
+def _sync_budget_guard(request, monkeypatch):
+    if getattr(request.node, "fspath", None) is None or \
+            request.node.fspath.basename not in _SYNC_GUARDED_FILES:
+        yield
+        return
+    from repro.serving import scheduler as sched_mod
+    created = []
+    orig_init = sched_mod._SchedulerBase.__init__
+
+    def _tracking_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        created.append(self)
+
+    monkeypatch.setattr(sched_mod._SchedulerBase, "__init__",
+                        _tracking_init)
+    yield
+    for sched in created:
+        c = sched.counters
+        # one pooled dispatch per tick at most, and every dispatch's
+        # outputs ride exactly one blocking transfer
+        assert c["controller_syncs"] <= c["controller_dispatches"] \
+            <= sched.ticks, (
+            "pooled-controller sync budget exceeded: "
+            f"{c['controller_syncs']} syncs / "
+            f"{c['controller_dispatches']} dispatches over "
+            f"{sched.ticks} ticks (≤1 per tick, DESIGN.md §4)")
+        # the fused tick's two sanctioned transfers: sampler keys + THE
+        # tokens/controller/finite transfer
+        assert c["host_syncs"] <= 2 * sched.ticks, (
+            f"host-sync budget exceeded: {c['host_syncs']} blocking "
+            f"transfers over {sched.ticks} ticks (≤2 per tick)")
+
 try:
     import pytest_timeout  # noqa: F401
     _HAVE_TIMEOUT_PLUGIN = True

@@ -1,0 +1,491 @@
+"""repro-lint (src/repro/analysis) unit tests.
+
+One positive + one negative fixture per rule R1–R8, driven through
+``analyze_source`` with repo-shaped relative paths (rules scope on path
+components, so ``src/repro/serving/strategies.py`` behaves exactly like
+the real module). Plus: inline suppressions, baseline round-trip, CLI
+exit codes, and the meta-test that the repo itself is lint-clean under
+the checked-in baseline.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source, baseline
+from repro.analysis.cli import main as lint_main
+from repro.analysis.core import all_rules
+
+REPO = Path(__file__).resolve().parents[1]
+
+SERVING = "src/repro/serving/strategies.py"
+KERNELS = "src/repro/kernels/fixture.py"
+
+
+def only(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+def test_registry_has_all_eight_rules():
+    ids = set(all_rules())
+    assert ids == {
+        "replay-determinism", "sync-discipline", "donation-safety",
+        "interpret-default", "traced-branch", "alloc-pairing",
+        "strategy-protocol", "jit-key-hygiene",
+    }
+
+
+def test_rules_carry_explain_metadata():
+    for rule in all_rules().values():
+        assert rule.contract and rule.rationale and rule.example, rule.id
+
+
+# --------------------------------------------------- R1 replay-determinism
+
+R1_POS = """\
+import time
+
+def watchdog(self):
+    now = time.time()
+    return now
+"""
+
+R1_NEG = """\
+import time
+import numpy as np
+
+def ok(self, clock=time.monotonic):
+    rng = np.random.default_rng(42)
+    return clock, rng
+"""
+
+
+def test_r1_flags_wall_clock_in_serving():
+    hits = only(analyze_source(R1_POS, SERVING), "replay-determinism")
+    assert len(hits) == 1 and "time.time" in hits[0].message
+
+
+def test_r1_allows_clock_default_and_seeded_rng():
+    assert only(analyze_source(R1_NEG, SERVING), "replay-determinism") == []
+
+
+def test_r1_scoped_to_replay_critical_modules():
+    # same wall-clock call outside serving/core/serve.py: not R1's beat
+    hits = analyze_source(R1_POS, "src/repro/models/x.py")
+    assert only(hits, "replay-determinism") == []
+
+
+# ------------------------------------------------------ R2 sync-discipline
+
+R2_POS = """\
+import numpy as np
+
+def step(self, state):
+    alive = np.asarray(state.alive)
+    return alive
+"""
+
+R2_NEG = """\
+import numpy as np
+
+def sample_and_advance(self, logits):
+    return np.asarray(logits)
+"""
+
+
+def test_r2_flags_host_sync_in_tick_path():
+    hits = only(analyze_source(R2_POS, SERVING), "sync-discipline")
+    assert len(hits) == 1 and "np.asarray" in hits[0].message
+
+
+def test_r2_allowlists_sanctioned_sites():
+    assert only(analyze_source(R2_NEG, SERVING), "sync-discipline") == []
+
+
+def test_r2_scoped_to_tick_modules():
+    hits = analyze_source(R2_POS, "src/repro/serving/frontend.py")
+    assert only(hits, "sync-discipline") == []
+
+
+# ------------------------------------------------------ R3 donation-safety
+
+R3_POS = """\
+import jax
+
+def _f(cache, tok):
+    return cache
+
+step = jax.jit(_f, donate_argnums=(0,))
+
+def tick(cache, tok):
+    logits = step(cache, tok)
+    return logits, cache
+"""
+
+R3_NEG = """\
+import jax
+
+def _f(cache, tok):
+    return cache
+
+step = jax.jit(_f, donate_argnums=(0,))
+
+def tick(cache, tok):
+    logits, cache = step(cache, tok)
+    return logits, cache
+"""
+
+
+def test_r3_flags_read_after_donation():
+    hits = only(analyze_source(R3_POS, "src/repro/serving/x.py"),
+                "donation-safety")
+    assert len(hits) == 1 and "`cache`" in hits[0].message
+
+
+def test_r3_allows_rebinding_assignment():
+    assert only(analyze_source(R3_NEG, "src/repro/serving/x.py"),
+                "donation-safety") == []
+
+
+# ---------------------------------------------------- R4 interpret-default
+
+R4_POS = """\
+def my_kernel(x, interpret=True):
+    return x
+"""
+
+R4_CALLSITE_POS = """\
+def run(fn, x):
+    return fn(x, interpret=True)
+"""
+
+R4_NEG = """\
+from repro.kernels import interpret_mode
+
+def good_kernel(x, interpret=None):
+    interpret = interpret_mode() if interpret is None else interpret
+    return x
+
+def _private_jit_body(x, interpret=True):
+    return x
+"""
+
+
+def test_r4_flags_hardcoded_interpret_default():
+    hits = only(analyze_source(R4_POS, KERNELS), "interpret-default")
+    assert len(hits) == 1 and "interpret=True" in hits[0].message
+
+
+def test_r4_flags_hardcoded_interpret_at_call_site():
+    hits = only(analyze_source(R4_CALLSITE_POS, "src/repro/serving/e.py"),
+                "interpret-default")
+    assert len(hits) == 1 and "call site" in hits[0].message
+
+
+def test_r4_allows_none_default_resolved_via_interpret_mode():
+    assert only(analyze_source(R4_NEG, KERNELS), "interpret-default") == []
+
+
+def test_r4_ignores_tests_tree():
+    hits = analyze_source(R4_CALLSITE_POS, "tests/test_kernels.py")
+    assert only(hits, "interpret-default") == []
+
+
+# -------------------------------------------------------- R5 traced-branch
+
+R5_POS = """\
+import jax
+
+@jax.jit
+def step(state, x):
+    if x > 0:
+        return state + x
+    return state
+"""
+
+R5_NEG = """\
+import functools
+
+import jax
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def step2(state, n):
+    if n > 0:
+        return state * n
+    return state
+
+@jax.jit
+def step3(state, x):
+    if x.shape[0] > 1:
+        return state
+    return state + x
+"""
+
+
+def test_r5_flags_python_branch_on_traced_value():
+    hits = only(analyze_source(R5_POS, "src/repro/core/k.py"),
+                "traced-branch")
+    assert len(hits) == 1 and "`x`" in hits[0].message
+
+
+def test_r5_allows_static_args_and_shape_branches():
+    assert only(analyze_source(R5_NEG, "src/repro/core/k.py"),
+                "traced-branch") == []
+
+
+# -------------------------------------------------------- R6 alloc-pairing
+
+R6_POS = """\
+def grow(self, alloc, row, n):
+    pages = alloc.alloc_row(row, n)
+    if not pages:
+        return None
+    alloc.free_row(row)
+    return pages
+"""
+
+R6_NEG = """\
+def balanced(self, alloc, row, n):
+    pages = alloc.alloc_row(row, n)
+    try:
+        return pages
+    finally:
+        alloc.free_row(row)
+
+def pin_only(self, cache, page):
+    cache.pin_page(page)
+"""
+
+
+def test_r6_flags_leak_on_early_return_path():
+    hits = only(analyze_source(R6_POS, "src/repro/serving/cache.py"),
+                "alloc-pairing")
+    assert len(hits) == 1 and "alloc_row/free_row" in hits[0].message
+
+
+def test_r6_allows_balanced_and_single_sided_functions():
+    assert only(analyze_source(R6_NEG, "src/repro/serving/cache.py"),
+                "alloc-pairing") == []
+
+
+# ---------------------------------------------------- R7 strategy-protocol
+
+R7_POS = """\
+class DecodeStrategy:
+    pass
+
+class Mine(DecodeStrategy):
+    name = "mine"
+
+    def choose(self, branch_ids, done):
+        return 0
+"""
+
+R7_NEG = """\
+class DecodeStrategy:
+    pass
+
+class Good(DecodeStrategy):
+    name = "good"
+
+    def step(self, *a, **kw):
+        return None
+
+    def decided_branch(self, branch_ids, done):
+        return None
+
+class Derived(Good):
+    name = "derived"
+
+class _AbstractHelper(DecodeStrategy):
+    def shared(self):
+        return 1
+
+class NoNameYet(DecodeStrategy):
+    def helper(self):
+        return 1
+"""
+
+
+def test_r7_flags_incomplete_concrete_strategy():
+    hits = only(analyze_source(R7_POS, SERVING), "strategy-protocol")
+    assert len(hits) == 1
+    assert "step" in hits[0].message
+    assert "decided_branch" in hits[0].message
+
+
+def test_r7_allows_conforming_inherited_abstract_and_unnamed():
+    assert only(analyze_source(R7_NEG, SERVING), "strategy-protocol") == []
+
+
+# ------------------------------------------------------ R8 jit-key-hygiene
+
+R8_POS = """\
+import jax
+
+def _f(x, key):
+    return x
+
+step = jax.jit(_f, static_argnums=(1,))
+
+def tick(self, x, n):
+    return step(x, f"rows={n}")
+"""
+
+R8_NEG = """\
+import jax
+
+def _f(x, key):
+    return x
+
+step = jax.jit(_f, static_argnums=(1,))
+
+def tick(self, x, cfg):
+    return step(x, cfg)
+"""
+
+
+def test_r8_flags_fresh_literal_static_arg():
+    hits = only(analyze_source(R8_POS, "src/repro/serving/scheduler.py"),
+                "jit-key-hygiene")
+    assert len(hits) == 1 and "f-string" in hits[0].message
+
+
+def test_r8_allows_stable_static_args():
+    assert only(analyze_source(R8_NEG, "src/repro/serving/scheduler.py"),
+                "jit-key-hygiene") == []
+
+
+# --------------------------------------------------- suppressions / parse
+
+def test_inline_suppression_same_line():
+    src = R2_POS.replace(
+        "np.asarray(state.alive)",
+        "np.asarray(state.alive)  # repro-lint: disable=sync-discipline")
+    assert only(analyze_source(src, SERVING), "sync-discipline") == []
+
+
+def test_inline_suppression_next_line():
+    src = R2_POS.replace(
+        "    alive = np.asarray(state.alive)",
+        "    # repro-lint: disable-next-line=sync-discipline\n"
+        "    alive = np.asarray(state.alive)")
+    assert only(analyze_source(src, SERVING), "sync-discipline") == []
+
+
+def test_suppression_is_per_rule():
+    src = R2_POS.replace(
+        "np.asarray(state.alive)",
+        "np.asarray(state.alive)  # repro-lint: disable=traced-branch")
+    assert len(only(analyze_source(src, SERVING), "sync-discipline")) == 1
+
+
+def test_parse_error_is_a_finding_not_a_crash():
+    hits = analyze_source("def broken(:\n", "src/repro/serving/x.py")
+    assert len(hits) == 1 and hits[0].rule == "parse-error"
+
+
+# ------------------------------------------------------- baseline machinery
+
+def test_baseline_round_trip(tmp_path):
+    findings = analyze_source(R2_POS, SERVING)
+    assert findings
+    entries = baseline.from_findings(findings, reason="test fixture")
+    path = tmp_path / "b.json"
+    baseline.save(path, entries)
+    loaded = baseline.load(path)
+    new, old, stale = baseline.partition(findings, loaded)
+    assert new == [] and len(old) == len(findings) and stale == []
+
+
+def test_baseline_matching_is_line_number_independent():
+    findings = analyze_source(R2_POS, SERVING)
+    entries = baseline.from_findings(findings)
+    shifted = analyze_source("\n\n\n" + R2_POS, SERVING)
+    new, old, _ = baseline.partition(shifted, entries)
+    assert new == [] and len(old) == len(findings)
+
+
+def test_baseline_count_budget_and_staleness():
+    findings = analyze_source(R2_POS, SERVING)
+    entries = baseline.from_findings(findings)
+    # duplicating a baselined sin on a second line exceeds the budget
+    doubled = analyze_source(
+        R2_POS.replace("    return alive",
+                       "    alive = np.asarray(state.alive)\n"
+                       "    return alive"),
+        SERVING)
+    new, old, _ = baseline.partition(doubled, entries)
+    assert len(old) == len(findings) and len(new) == 1
+    # a fixed violation leaves its entry stale for deletion
+    _, _, stale = baseline.partition([], entries)
+    assert stale == entries
+
+
+# ----------------------------------------------------------- CLI contract
+
+def _fixture_tree(tmp_path, source):
+    mod = tmp_path / "src" / "repro" / "serving" / "strategies.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(source)
+    return tmp_path
+
+
+def test_cli_exit_nonzero_on_finding(tmp_path, capsys):
+    root = _fixture_tree(tmp_path, R2_POS)
+    rc = lint_main(["--no-baseline", "--root", str(root), "src"])
+    assert rc == 1
+    assert "sync-discipline" in capsys.readouterr().out
+
+
+def test_cli_exit_zero_on_clean_tree(tmp_path, capsys):
+    root = _fixture_tree(tmp_path, R2_NEG)
+    assert lint_main(["--no-baseline", "--root", str(root), "src"]) == 0
+
+
+def test_cli_github_format_emits_annotations(tmp_path, capsys):
+    root = _fixture_tree(tmp_path, R2_POS)
+    rc = lint_main(["--no-baseline", "--format", "github",
+                    "--root", str(root), "src"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "::error file=src/repro/serving/strategies.py" in out
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    root = _fixture_tree(tmp_path, R2_POS)
+    bl = tmp_path / "baseline.json"
+    assert lint_main(["--write-baseline", "--baseline", str(bl),
+                      "--root", str(root), "src"]) == 0
+    assert bl.exists()
+    assert lint_main(["--baseline", str(bl),
+                      "--root", str(root), "src"]) == 0
+
+
+def test_cli_explain(capsys):
+    assert lint_main(["--explain", "all"]) == 0
+    out = capsys.readouterr().out
+    for rid in all_rules():
+        assert rid in out
+    assert lint_main(["--explain", "no-such-rule"]) == 2
+
+
+# ------------------------------------------------------- repo is clean
+
+@pytest.mark.parametrize("tree", ["src", "benchmarks", "examples"])
+def test_repo_tree_is_lint_clean_under_baseline(tree):
+    if not (REPO / tree).exists():
+        pytest.skip(f"{tree}/ not present")
+    findings = analyze_paths([tree], REPO)
+    entries = baseline.load(REPO / baseline.BASELINE_NAME)
+    new, _, _ = baseline.partition(findings, entries)
+    assert new == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule}: {f.message}" for f in new)
+
+
+def test_baseline_has_no_stale_entries_and_real_reasons():
+    findings = analyze_paths(["src", "benchmarks", "examples"], REPO)
+    entries = baseline.load(REPO / baseline.BASELINE_NAME)
+    _, _, stale = baseline.partition(findings, entries)
+    assert stale == [], f"stale baseline entries: {stale}"
+    for e in entries:
+        assert e["reason"] and "TODO" not in e["reason"], e
