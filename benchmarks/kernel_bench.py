@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.signals import compute_signals, log_softmax, reference_log_q
-from repro.kernels.decode_attn.ops import decode_attn, paged_decode_attn
+from repro.kernels.decode_attn.ops import (decode_attn, paged_decode_attn,
+                                           paged_prefill_attn)
 from repro.kernels.fused_score.ops import fused_score
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
 
@@ -88,6 +89,34 @@ def _wrapper_smoke():
                     lambda *a: (paged_decode_attn(*a),), q, kp, vp, bt, pos,
                     iters=3)})
 
+    # int8 pages: per-(page, slot, head) absmax scales, dequant in-kernel
+    def q8(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x), -1), 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(x / s[..., None]), -127, 127).astype(jnp.int8)
+        return qv, s
+
+    kq, ksc = q8(kp)
+    vq, vsc = q8(vp)
+    out.append({"name": "wrapper_paged_decode_attn_int8",
+                "us_fused": _time(
+                    lambda *a: (paged_decode_attn(
+                        *a, k_scales=ksc, v_scales=vsc),),
+                    q, kq, vq, bt, pos, iters=3)})
+
+    # paged chunk prefill: C tokens attend causally through the table
+    C = 8
+    qc = jax.random.normal(ks[7], (B, C, H, hd))
+    pos0 = jnp.array([40, 56], jnp.int32)
+    out.append({"name": "wrapper_paged_prefill_attn",
+                "us_fused": _time(
+                    lambda *a: (paged_prefill_attn(*a),), qc, kp, vp, bt,
+                    pos0, iters=3)})
+    out.append({"name": "wrapper_paged_prefill_attn_int8",
+                "us_fused": _time(
+                    lambda *a: (paged_prefill_attn(
+                        *a, k_scales=ksc, v_scales=vsc),),
+                    qc, kq, vq, bt, pos0, iters=3)})
+
     # the serving-layer wiring: attn_decode_paged with the paged kernel
     # forced on (the path TPU decode takes), K/V write included
     from repro.models import attention as attn_mod
@@ -103,6 +132,21 @@ def _wrapper_smoke():
                             *a, num_heads=H, num_kv_heads=KV, head_dim=hd,
                             rope_theta=1e4, use_rope=True),
                         ap, x, pos, cache, bt, iters=3)})
+        # quantized edition of the same wiring — the regression smoke
+        # for the silent int8 fallback (attention must still trace the
+        # Pallas kernel when the pool carries scale leaves)
+        cache8 = attn_mod.init_paged_kv(P, ps, KV, hd, jnp.float32,
+                                        quantized=True)
+        attn_mod.reset_paged_backend_counts()
+        out.append({"name": "wrapper_attn_decode_paged_wired_int8",
+                    "us_fused": _time(
+                        lambda *a: attn_mod.attn_decode_paged(
+                            *a, num_heads=H, num_kv_heads=KV, head_dim=hd,
+                            rope_theta=1e4, use_rope=True),
+                        ap, x, pos, cache8, bt, iters=3)})
+        counts = attn_mod.paged_backend_counts()
+        assert counts["decode_oracle"] == 0, \
+            f"int8 paged decode fell back to the gather oracle: {counts}"
     finally:
         attn_mod.set_paged_kernel(None)
 

@@ -80,6 +80,7 @@ from repro.data import tasks
 from repro.data import tokenizer as tok
 from repro.launch.serve import _strategy_factory
 from repro.models import init_cache, init_params
+from repro.serving import cache as cache_lib
 from repro.serving import engine
 from repro.serving import sampler
 from repro.serving.scheduler import ContinuousBatchingScheduler, PagedScheduler
@@ -222,6 +223,104 @@ def _fanout_scenario(cfg, params):
         "tokens_per_s": tp["tokens_per_s"],
         "page_utilization": tp["page_utilization"],
         "ticks": tp["ticks"], "time_s": tp["time_s"],
+    }]
+
+
+INT8_PARITY_PROBLEMS = 12       # answer-parity sweep size (per method)
+INT8_DEPTH = 10                 # deeper queue: the int8 pool's peak
+                                # concurrency must not be capped by
+                                # running out of queued requests
+
+
+def _int8_capacity_scenario(cfg, params):
+    """Part 7 (int8 paged KV acceptance): ONE fixed HBM page budget,
+    served twice — model-dtype pages vs int8 pages + scale leaves. The
+    int8 pool cuts the same bytes into >= 1.8x the pages (page_bytes
+    shrinks from hd*itemsize to hd+4 per token-head), so the N=8 fan-out
+    queue reaches >= 1.8x the peak concurrent admitted requests. A
+    BoN/KAPPA sweep over the synthetic tasks then checks answer
+    accuracy parity against fp serving — quantization must buy capacity,
+    not trade away correctness."""
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    kcfg = _kcfg(FANOUT_N)
+    prompts = _long_prompts(INT8_DEPTH)
+    max_seq = max(len(p) for p in prompts) + kcfg.max_new_tokens
+    max_seq = -(-max_seq // PAGE_SIZE) * PAGE_SIZE
+    need = [-(-(len(p) + kcfg.max_new_tokens) // PAGE_SIZE) for p in prompts]
+    full = [len(p) // PAGE_SIZE for p in prompts]
+    shared_worst = max(f + FANOUT_N * (n - f) for f, n in zip(full, need))
+    # budget sized so the model-dtype pool serves the queue ~serially
+    budget = (shared_worst + 4) * cache_lib.page_bytes(cfg, PAGE_SIZE)
+
+    def serve(c):
+        sched = PagedScheduler(params, c, kcfg, rows=FANOUT_N * INT8_DEPTH,
+                               max_seq=max_seq, page_size=PAGE_SIZE,
+                               page_budget_bytes=budget, method="kappa",
+                               eos_id=tok.EOS, bos_id=tok.BOS)
+        rids = [sched.submit(p, jax.random.PRNGKey(i))
+                for i, p in enumerate(prompts)]
+        peak, t0 = 0, time.perf_counter()
+        while sched.queue or sched.active or sched.prefilling:
+            sched.tick()
+            peak = max(peak, len(sched.active))
+        sched.elapsed = time.perf_counter() - t0   # run() normally sets it
+        assert set(sched.results) == set(rids)
+        assert sched.alloc.free_count == sched.num_pages, \
+            f"leaked {sched.num_pages - sched.alloc.free_count} pages"
+        return sched, peak, sched.throughput()
+
+    s_fp, peak_fp, tp_fp = serve(cfg)
+    s_i8, peak_i8, tp_i8 = serve(cfg8)
+    assert s_i8.num_pages >= int(1.8 * s_fp.num_pages), \
+        f"int8 page capacity only {s_i8.num_pages}/{s_fp.num_pages}"
+    want_peak = min(INT8_DEPTH, int(np.ceil(1.8 * peak_fp)))
+    assert peak_i8 >= want_peak, \
+        f"int8 admitted {peak_i8} concurrent vs {peak_fp} fp " \
+        f"(>= {want_peak} wanted)"
+
+    # answer parity: same problems, same keys, fp sequential vs int8
+    # paged serving, both BoN and KAPPA
+    probs = tasks.make_dataset(4321, INT8_PARITY_PROBLEMS,
+                               **common.DATASET_KW)
+    sp = [np.array(p.prompt) for p in probs]
+    kc = _kcfg()
+    ms = -(-(max(len(p) for p in sp) + kc.max_new_tokens)
+           // PAGE_SIZE) * PAGE_SIZE
+    rows_par = 2 * kc.num_branches
+    acc = {}
+    for method in ("kappa", "bon"):
+        fn = getattr(engine, f"generate_{method}")
+        gens_fp = [fn(params, cfg, kc, p, jax.random.PRNGKey(i),
+                      eos_id=tok.EOS, bos_id=tok.BOS, max_seq=ms)
+                   for i, p in enumerate(sp)]
+        gens_i8, _ = _run_scheduled(
+            cfg8, params, kc, method, sp, ms, rows_par, paged=True,
+            page_size=PAGE_SIZE,
+            num_pages=rows_par * ms // PAGE_SIZE)
+        for label, gens in (("fp", gens_fp), ("int8", gens_i8)):
+            acc[f"{method}_{label}"] = float(np.mean(
+                [tasks.check_answer(g.tokens, pr)
+                 for g, pr in zip(gens, probs)]))
+    parity_tol = 2.0 / INT8_PARITY_PROBLEMS
+    parity_ok = all(abs(acc[f"{m}_fp"] - acc[f"{m}_int8"]) <= parity_tol
+                    for m in ("kappa", "bon"))
+    assert parity_ok, f"int8 answer accuracy drifted: {acc}"
+    return [{
+        "kind": "int8", "fan_out": FANOUT_N, "depth": INT8_DEPTH,
+        "page_size": PAGE_SIZE, "page_budget_bytes": budget,
+        "num_pages_fp": s_fp.num_pages, "num_pages_int8": s_i8.num_pages,
+        "peak_concurrent_fp": peak_fp, "peak_concurrent_int8": peak_i8,
+        "admit_ratio": peak_i8 / max(peak_fp, 1),
+        "page_ratio": s_i8.num_pages / max(s_fp.num_pages, 1),
+        "parity_ok": parity_ok, "parity_problems": INT8_PARITY_PROBLEMS,
+        "fp_tokens_per_s": tp_fp["tokens_per_s"],
+        "int8_tokens_per_s": tp_i8["tokens_per_s"],
+        "int8_preemptions": tp_i8["preemptions"],
+        "fp_preemptions": tp_fp["preemptions"],
+        "int8_ticks": tp_i8["ticks"], "int8_time_s": tp_i8["time_s"],
+        "fp_ticks": tp_fp["ticks"], "fp_time_s": tp_fp["time_s"],
+        **{f"acc_{k}": v for k, v in acc.items()},
     }]
 
 
@@ -877,6 +976,7 @@ def run(cfg, params):
                 "paged_controller_syncs": tp_p["controller_syncs"],
             })
     out.extend(_fanout_scenario(cfg, params))
+    out.extend(_int8_capacity_scenario(cfg, params))
     out.extend(_interleave_scenario(cfg, params))
     out.extend(_prefix_scenario(cfg, params))
     out.extend(_overload_scenario(cfg, params))
@@ -933,6 +1033,19 @@ def emit_csv(rows):
                        f"{r['adaptive']['goodput_tokens_per_s']:.1f};"
                        f"static_shed={r['static']['shed']};"
                        f"adaptive_shed={r['adaptive']['shed']}")
+        elif r["kind"] == "int8":
+            name = f"throughput/int8_fanout{r['fan_out']}"
+            us = r["int8_time_s"] * 1e6 / max(r["int8_ticks"], 1)
+            derived = (f"budget_kb={r['page_budget_bytes'] // 1024};"
+                       f"pages_fp={r['num_pages_fp']};"
+                       f"pages_int8={r['num_pages_int8']};"
+                       f"peak_req_fp={r['peak_concurrent_fp']};"
+                       f"peak_req_int8={r['peak_concurrent_int8']};"
+                       f"admit_ratio={r['admit_ratio']:.2f};"
+                       f"acc_kappa={r['acc_kappa_int8']:.2f}"
+                       f"/{r['acc_kappa_fp']:.2f};"
+                       f"acc_bon={r['acc_bon_int8']:.2f}"
+                       f"/{r['acc_bon_fp']:.2f}")
         elif r["kind"] == "fanout":
             name = f"throughput/fanout{r['fan_out']}_depth{r['depth']}"
             us = r["time_s"] * 1e6 / max(r["ticks"], 1)
@@ -1085,6 +1198,20 @@ if __name__ == "__main__":
         print(f"# acceptance: adaptive admission holds admitted ITL p99 "
               f"<= {OPENLOOP_SLO_BOUND}x unloaded at an offered rate "
               f"where static admission exceeds it{at} -> {verdict}")
+    for r in rows:
+        if r["kind"] == "int8":
+            verdict = "PASS" if (r["admit_ratio"] >= 1.8
+                                 and r["parity_ok"]) else "FAIL"
+            print(f"# int8 KV: equal {r['page_budget_bytes'] // 1024}KiB "
+                  f"budget holds {r['num_pages_int8']} int8 pages vs "
+                  f"{r['num_pages_fp']} fp — peak "
+                  f"{r['peak_concurrent_int8']} concurrent fan-out "
+                  f"requests vs {r['peak_concurrent_fp']} "
+                  f"({r['admit_ratio']:.1f}x, >=1.8 target); answer "
+                  f"accuracy kappa {r['acc_kappa_int8']:.2f} vs "
+                  f"{r['acc_kappa_fp']:.2f} fp, bon "
+                  f"{r['acc_bon_int8']:.2f} vs {r['acc_bon_fp']:.2f} fp "
+                  f"-> {verdict}")
     for r in rows:
         if r["kind"] == "fanout":
             print(f"# fanout N={r['fan_out']} depth={r['depth']}: served in "

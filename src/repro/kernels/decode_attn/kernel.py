@@ -133,18 +133,35 @@ def _decode_attn_jit(q, k, v, pos, *, window: int, ring: bool,
 
 # ----------------------------------------------------------------- paged
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s,
-                  acc_s, *, n_pages: int, page_size: int, scale: float):
-    """Paged flash-decode: one grid step streams one owned page.
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                  n_pages: int, page_size: int, group: int, scale: float,
+                  quantized: bool):
+    """Paged flash attention body, shared by decode and chunk prefill:
+    one grid step streams one owned page against R query rows.
 
     The S-tile index map dereferences the block table (scalar-prefetched),
     so the kernel's K/V DMAs touch only physical pages a row's table names
     — pruned/unallocated capacity is never streamed. Validity is purely
-    positional (kv_pos <= pos[b]); table entries past a row's position may
-    alias a shared trash page and are masked here."""
+    positional; table entries past a row's position may alias a shared
+    trash page and are masked here.
+
+    Query-row positions: row r belongs to chunk token r // group at
+    absolute position pos_ref[b] + r // group. Decode is the R == group
+    case (every row is the same single token at pos). Causality between
+    chunk tokens falls out of the same mask: a chunk token never sees a
+    younger sibling's freshly written slot.
+
+    ``quantized`` prepends per-token-head fp32 scale refs (same block-table
+    indexed layout as K/V) to ``rest``; dequant happens on the VMEM tile,
+    so int8 KV never materializes as fp32 in HBM."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_s, l_s, acc_s = rest
+    else:
+        o_ref, m_s, l_s, acc_s = rest
     b = pl.program_id(0)
     li = pl.program_id(2)                         # logical page index
     pos = pos_ref[b]
+    R = q_ref.shape[2]
 
     @pl.when(li == 0)
     def _init():
@@ -152,15 +169,20 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s,
         l_s[:] = jnp.zeros_like(l_s)
         acc_s[:] = jnp.zeros_like(acc_s)
 
-    q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+    q = q_ref[0, 0].astype(jnp.float32)           # (R, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
+    if quantized:
+        k = k * ks_ref[0]                         # (ps, hd) * (ps, 1)
+        v = v * vs_ref[0]
 
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ps)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (R, ps)
 
+    qpos = pos + jax.lax.broadcasted_iota(
+        jnp.int32, (R, page_size), 0) // group
     kv_pos = li * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, page_size), 1)
-    valid = kv_pos <= pos
+        jnp.int32, (R, page_size), 1)
+    valid = kv_pos <= qpos
     s = jnp.where(valid, s, NEG)
 
     m_prev = m_s[:]
@@ -177,26 +199,55 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s,
 
 
 def paged_decode_attn_pallas(q, k_pages, v_pages, block_tables, pos, *,
+                             k_scales=None, v_scales=None,
                              interpret: Optional[bool] = None):
     """Paged GQA flash-decode. q: (B, H, hd); k_pages, v_pages:
     (P, ps, KV, hd) page pools; block_tables: (B, MP) int32 physical page
     per logical page; pos: (B,) int32 per-row positions.
+
+    ``k_scales``/``v_scales`` (P, ps, KV) fp32 activate the int8 path:
+    pages are dequantized on the VMEM tile (scale pages ride the same
+    block-table scalar prefetch), never as fp32 in HBM.
+
     Returns (B, H, hd) fp32. See ref.paged_decode_attn_ref for the page
     semantics (entries past pos may alias a trash page — masked)."""
     if interpret is None:
         interpret = interpret_mode()
-    return _paged_decode_attn_jit(q, k_pages, v_pages, block_tables, pos,
-                                  interpret=interpret)
+    out = _paged_attn_jit(q[:, None], k_pages, v_pages, block_tables, pos,
+                          k_scales, v_scales, interpret=interpret)
+    return out[:, 0]
+
+
+def paged_prefill_attn_pallas(q, k_pages, v_pages, block_tables, pos0, *,
+                              k_scales=None, v_scales=None,
+                              interpret: Optional[bool] = None):
+    """Paged GQA chunk-prefill attention: C chunk tokens per row attend
+    causally over the row's pages (history + the chunk's own freshly
+    written slots). q: (B, C, H, hd); pos0: (B,) int32 absolute position
+    of each row's first chunk token. The block table prefix is expected
+    bucketed by the caller (scheduler `_chunk_args` style) so jit keys
+    stay stable across chunk counts.
+
+    ``k_scales``/``v_scales`` (P, ps, KV) fp32 activate the int8 path.
+    Returns (B, C, H, hd) fp32."""
+    if interpret is None:
+        interpret = interpret_mode()
+    return _paged_attn_jit(q, k_pages, v_pages, block_tables, pos0,
+                           k_scales, v_scales, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _paged_decode_attn_jit(q, k_pages, v_pages, block_tables, pos, *,
-                           interpret: bool):
-    B, H, hd = q.shape
+def _paged_attn_jit(q, k_pages, v_pages, block_tables, pos,
+                    k_scales, v_scales, *, interpret: bool):
+    B, C, H, hd = q.shape
     P, ps, KV, _ = k_pages.shape
     MP = block_tables.shape[1]
     G = H // KV
-    qr = q.reshape(B, KV, G, hd)
+    R = C * G
+    quant = k_scales is not None
+    # group query rows by kv-head: row r = chunk token r // G, head r % G
+    qr = (q.reshape(B, C, KV, G, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(B, KV, R, hd))
     bt_flat = jnp.asarray(block_tables, jnp.int32).reshape(B * MP)
 
     def kv_map(b, kv, l, bt_ref, pos_ref):
@@ -204,29 +255,41 @@ def _paged_decode_attn_jit(q, k_pages, v_pages, block_tables, pos, *,
         phys = bt_ref[b * MP + l]
         return (phys, 0, kv, 0)
 
+    def scale_map(b, kv, l, bt_ref, pos_ref):
+        phys = bt_ref[b * MP + l]
+        return (phys, 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, R, hd),
+                     lambda b, kv, l, bt_ref, pos_ref: (b, kv, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd), kv_map),
+        pl.BlockSpec((1, ps, 1, hd), kv_map),
+    ]
+    operands = [bt_flat, jnp.asarray(pos, jnp.int32), qr, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, MP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, kv, l, bt_ref, pos_ref: (b, kv, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd), kv_map),
-            pl.BlockSpec((1, ps, 1, hd), kv_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, R, hd),
                                lambda b, kv, l, bt_ref, pos_ref: (b, kv, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
         ],
     )
     kern = functools.partial(_paged_kernel, n_pages=MP, page_size=ps,
-                             scale=hd ** -0.5)
+                             group=G, scale=hd ** -0.5, quantized=quant)
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, KV, R, hd), jnp.float32),
         interpret=interpret,
-    )(bt_flat, jnp.asarray(pos, jnp.int32), qr, k_pages, v_pages)
-    return out.reshape(B, H, hd)
+    )(*operands)
+    return (out.reshape(B, KV, C, G, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(B, C, H, hd))

@@ -42,7 +42,21 @@ def decode_attn_ref(q, k, v, pos, *, window: int = 0, ring: bool = False):
     return out.reshape(B, H, hd)
 
 
-def paged_decode_attn_ref(q, k_pages, v_pages, block_tables, pos):
+def _gather_paged_kv(k_pages, v_pages, block_tables, k_scales, v_scales):
+    """Gather each row's pages into a contiguous logical fp32 view
+    (B, MP*ps, KV, hd), dequantizing int8 pages when scales are given."""
+    B, MP = block_tables.shape
+    P, ps, KV, hd = k_pages.shape
+    k = k_pages[block_tables].reshape(B, MP * ps, KV, hd).astype(jnp.float32)
+    v = v_pages[block_tables].reshape(B, MP * ps, KV, hd).astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[block_tables].reshape(B, MP * ps, KV)[..., None]
+        v = v * v_scales[block_tables].reshape(B, MP * ps, KV)[..., None]
+    return k, v
+
+
+def paged_decode_attn_ref(q, k_pages, v_pages, block_tables, pos, *,
+                          k_scales=None, v_scales=None):
     """One-token GQA decode attention over a paged KV pool.
 
     q: (B, H, hd) — query for the current token (already rope'd)
@@ -55,6 +69,8 @@ def paged_decode_attn_ref(q, k_pages, v_pages, block_tables, pos):
         only hands out pages covering positions the row will write.
     pos: (B,) int32 — per-row absolute position of the current token
         (its K/V already written into the owning page)
+    k_scales, v_scales: optional (P, ps, KV) fp32 per-token-head scales
+        for int8 page pools (dequantized before attention).
 
     Returns (B, H, hd) fp32.
     """
@@ -63,17 +79,50 @@ def paged_decode_attn_ref(q, k_pages, v_pages, block_tables, pos):
     MP = block_tables.shape[1]
     G = H // KV
 
-    # gather each row's pages into a contiguous logical view (B, MP*ps, ...)
-    k = k_pages[block_tables].reshape(B, MP * ps, KV, hd)
-    v = v_pages[block_tables].reshape(B, MP * ps, KV, hd)
+    k, v = _gather_paged_kv(k_pages, v_pages, block_tables,
+                            k_scales, v_scales)
 
     kv_pos = jnp.arange(MP * ps)
     valid = kv_pos[None, :] <= jnp.asarray(pos)[:, None]        # (B, S)
 
     qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
-    scores = jnp.einsum("bkgh,bskh->bkgs", qr, k.astype(jnp.float32))
+    scores = jnp.einsum("bkgh,bskh->bkgs", qr, k)
     scores = scores * (hd ** -0.5)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
     return out.reshape(B, H, hd)
+
+
+def paged_prefill_attn_ref(q, k_pages, v_pages, block_tables, pos0, *,
+                           k_scales=None, v_scales=None):
+    """Chunk-prefill GQA attention over a paged KV pool.
+
+    q: (B, C, H, hd) — C chunk tokens per row (already rope'd); their K/V
+        is already written into the owning pages.
+    pos0: (B,) int32 — absolute position of each row's first chunk token;
+        chunk token c sits at pos0 + c and attends causally over
+        ``kv_pos <= pos0 + c``.
+    k_scales, v_scales: optional (P, ps, KV) fp32 per-token-head scales.
+
+    Returns (B, C, H, hd) fp32.
+    """
+    B, C, H, hd = q.shape
+    P, ps, KV, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    G = H // KV
+
+    k, v = _gather_paged_kv(k_pages, v_pages, block_tables,
+                            k_scales, v_scales)
+
+    kv_pos = jnp.arange(MP * ps)
+    qpos = jnp.asarray(pos0)[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    valid = kv_pos[None, None, :] <= qpos[:, :, None]           # (B, C, S)
+
+    qr = q.reshape(B, C, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bckgh,bskh->bckgs", qr, k)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(valid[:, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bckgs,bskh->bckgh", probs, v)
+    return out.reshape(B, C, H, hd)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import dataclasses
 import time
 
 import jax
@@ -101,10 +102,15 @@ def serve_eval(arch: str, method: str, *, n: int = 5, problems: int = 20,
                max_queue: int | None = None,
                deadline_s: float | None = None,
                frontend_serve: bool = False,
-               stream: bool = False) -> dict:
+               stream: bool = False,
+               kv_dtype: str = "model") -> dict:
     if cfg is None:
         cfg = get_config(arch).reduced(num_layers=num_layers, d_model=d_model,
                                        vocab_size=tok.VOCAB_SIZE)
+    if kv_dtype != "model":
+        # quantized KV pages: the paged pool stores int8 values + fp32
+        # per-token-head scales and halves HBM per page vs bf16/fp32
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
     if params is None:
         params = init_params(jax.random.PRNGKey(0), cfg)
         if ckpt:
@@ -270,6 +276,12 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="allocatable KV pages for --paged (default: no "
                          "page pressure, rows*max_seq/page_size)")
+    ap.add_argument("--kv-dtype", default="model",
+                    choices=("model", "int8"),
+                    help="KV cache dtype: 'model' keeps the model dtype; "
+                         "'int8' quantizes KV pages (per-token-head fp32 "
+                         "scales, in-kernel dequant) for ~2x pages per "
+                         "HBM byte")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the cross-request radix prefix cache "
                          "(--paged only): admissions alias previously "
@@ -309,7 +321,7 @@ def main(argv=None):
                inject_faults=args.inject_faults, max_queue=args.max_queue,
                deadline_s=args.deadline_s,
                frontend_serve=args.frontend or args.stream,
-               stream=args.stream)
+               stream=args.stream, kv_dtype=args.kv_dtype)
 
 
 if __name__ == "__main__":

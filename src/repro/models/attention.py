@@ -238,6 +238,19 @@ def attn_prefill(p, x, positions, cache, *, num_heads: int, num_kv_heads: int,
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
 
+    # Quantize FIRST and attend over what the cache will hold: under int8
+    # every attention path (one-shot, chunked, paged, decode) sees the
+    # same dequantized values, so serving mode never perturbs logits.
+    quant = _is_quantized(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ka = _dequantize_kv(kq, ks, x.dtype)
+        va = _dequantize_kv(vq, vs, x.dtype)
+    else:
+        kq, vq, ks, vs = k, v, None, None
+        ka, va = k, v
+
     qr = q.reshape(B, S, num_kv_heads, G, head_dim)
     kv_pos = jnp.broadcast_to(positions, (B, S))
 
@@ -245,18 +258,12 @@ def attn_prefill(p, x, positions, cache, *, num_heads: int, num_kv_heads: int,
         m = qpos_blk[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
         if window > 0:
             m &= (qpos_blk[:, None, None, :, None] - kv_pos[:, None, None, None, :]) < window
-        return _attend(q_blk, k, v, m)
+        return _attend(q_blk, ka, va, m)
 
     out = _chunked_q(block, qr, kv_pos, B, S, num_kv_heads, G, head_dim)
     y = out.reshape(B, S, num_heads * head_dim) @ p["wo"]
 
     W = cache["k"].shape[1]
-    quant = _is_quantized(cache)
-    if quant:
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
-    else:
-        kq, vq, ks, vs = k, v, None, None
     if window > 0 and W < S:
         # ring cache: keep the last W tokens, rotated so slot = pos % W
         slots = jnp.mod(positions[-W:], W)
@@ -360,10 +367,12 @@ def attn_decode(p, x, pos, cache, *, num_heads: int, num_kv_heads: int,
 # against a cache that already holds each row's first pos0 tokens, so a
 # long admission advances one bounded chunk per scheduler tick instead
 # of stalling every decode row for the whole prompt. Keys are always
-# ordered by absolute position (history first, then the chunk), so the
-# causal mask only ever *trails* — masked slots contribute exact-0.0
-# terms after every real key, which is what keeps the final chunk's
-# logits bitwise equal to the one-shot prefill on the same positions.
+# ordered by absolute position (history first, then the chunk) — ring
+# layers included, whose slot-ordered window is re-gathered ascending —
+# so the causal mask only ever *trails*: masked slots contribute
+# exact-0.0 terms outside the real keys, which is what keeps the final
+# chunk's logits bitwise equal to the one-shot prefill on the same
+# positions for every layer kind.
 
 
 def _write_chunk_kv(cache, kq, vq, ks, vs, rows, slots, quant):
@@ -404,20 +413,36 @@ def attn_prefill_chunk(p, x, pos0, cache, *, hist_len: int, num_heads: int,
     if quant:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
+        # attend-from-cache: the chunk's own keys go through the same
+        # quantize→dequantize round trip the history already took, so
+        # chunked int8 prefill stays bitwise equal to one-shot (which
+        # rounds identically) and to the paged path (which re-reads the
+        # chunk from its pages)
+        kc = _dequantize_kv(kq, ks, x.dtype)
+        vc = _dequantize_kv(vq, vs, x.dtype)
     else:
         kq, vq, ks, vs = k, v, None, None
+        kc, vc = k, v
     rows = jnp.arange(B)[:, None]
 
     if is_ring:
-        # history = the whole ring as it stands before this chunk
-        hist_pos = ring_slot_positions(pos0[:, None] - 1, W)   # (B, W)
-        hk, hv = cache["k"], cache["v"]
+        # history = the whole ring as it stands before this chunk,
+        # gathered in ascending absolute-position order: position
+        # pos0 - W + i lives at slot (pos0 + i) mod W. Slot order (a
+        # rotation) holds the same keys but permutes the nonzero softmax
+        # terms, which perturbs the fp summation order — ascending order
+        # is what makes chunked ring prefill bitwise-equal to the
+        # one-shot path across chunk arrangements (DESIGN.md §6).
+        slots_asc = jnp.mod(pos0[:, None] + jnp.arange(W), W)  # (B, W)
+        hist_pos = pos0[:, None] - W + jnp.arange(W)           # (B, W)
+        hk = cache["k"][rows, slots_asc]
+        hv = cache["v"][rows, slots_asc]
         if quant:
-            hk = _dequantize_kv(hk, cache["k_s"], x.dtype)
-            hv = _dequantize_kv(hv, cache["v_s"], x.dtype)
+            hk = _dequantize_kv(hk, cache["k_s"][rows, slots_asc], x.dtype)
+            hv = _dequantize_kv(hv, cache["v_s"][rows, slots_asc], x.dtype)
         kv_pos = jnp.concatenate([hist_pos, qpos], axis=1)     # (B, W + C)
-        ka = jnp.concatenate([hk, k], axis=1)
-        va = jnp.concatenate([hv, v], axis=1)
+        ka = jnp.concatenate([hk, kc], axis=1)
+        va = jnp.concatenate([hv, vc], axis=1)
         valid = kv_pos >= 0
         # write the chunk's last min(C, W) tokens (their slots are
         # distinct mod W; older chunk tokens would be overwritten anyway)
@@ -437,8 +462,8 @@ def attn_prefill_chunk(p, x, pos0, cache, *, hist_len: int, num_heads: int,
             hv = _dequantize_kv(hv, cache["v_s"][:, :hist_len], x.dtype)
         hist_pos = jnp.broadcast_to(jnp.arange(hist_len), (B, hist_len))
         kv_pos = jnp.concatenate([hist_pos, qpos], axis=1)     # (B, H + C)
-        ka = jnp.concatenate([hk, k], axis=1)
-        va = jnp.concatenate([hv, v], axis=1)
+        ka = jnp.concatenate([hk, kc], axis=1)
+        va = jnp.concatenate([hv, vc], axis=1)
         # history slots at/after pos0 hold garbage (or other rows' data)
         valid = kv_pos < pos0[:, None]
         valid = valid.at[:, hist_len:].set(True)
@@ -495,6 +520,21 @@ def attn_prefill_chunk_paged(p, x, pos0, cache, block_tables, chunk_pages, *,
     new_cache["v"] = cache["v"].at[chunk_pages, off].set(
         vq.astype(cache["v"].dtype))
 
+    if use_paged_kernel():
+        # paged chunk-prefill kernel: C chunk tokens attend causally over
+        # the row's pages, streamed through the block table — the same
+        # no-HBM-gather property as the decode kernel, int8 included
+        from repro.kernels.decode_attn.ops import paged_prefill_attn
+        _count_paged_backend("prefill_kernel")
+        out = paged_prefill_attn(
+            q, new_cache["k"], new_cache["v"], block_tables, pos0,
+            k_scales=new_cache["k_s"] if quant else None,
+            v_scales=new_cache["v_s"] if quant else None)
+        y = (out.astype(x.dtype).reshape(B, C, num_heads * head_dim)
+             @ p["wo"])
+        return y, new_cache
+
+    _count_paged_backend("prefill_oracle")
     ka = new_cache["k"][block_tables].reshape(B, MP * ps, num_kv_heads,
                                               head_dim)
     va = new_cache["v"][block_tables].reshape(B, MP * ps, num_kv_heads,
@@ -516,6 +556,29 @@ def attn_prefill_chunk_paged(p, x, pos0, cache, block_tables, chunk_pages, *,
 
 
 _PAGED_KERNEL: Optional[bool] = None
+
+# Trace-time record of which backend the paged attention paths actually
+# dispatched — the kernel/oracle choice is a *Python* branch, invisible in
+# jaxprs and silent at runtime. Every trace of a paged attention function
+# bumps exactly one key, so a test (or an operator reading server stats)
+# can assert the Pallas kernel really traced instead of silently falling
+# back to the jnp gather oracle (the int8 bypass bug this guards against).
+_PAGED_BACKEND_COUNTS = {"decode_kernel": 0, "decode_oracle": 0,
+                         "prefill_kernel": 0, "prefill_oracle": 0}
+
+
+def paged_backend_counts() -> dict:
+    """Snapshot of trace-time paged-attention backend choices."""
+    return dict(_PAGED_BACKEND_COUNTS)
+
+
+def reset_paged_backend_counts() -> None:
+    for key in _PAGED_BACKEND_COUNTS:
+        _PAGED_BACKEND_COUNTS[key] = 0
+
+
+def _count_paged_backend(which: str) -> None:
+    _PAGED_BACKEND_COUNTS[which] += 1
 
 
 def set_paged_kernel(flag: Optional[bool]) -> None:
@@ -590,16 +653,22 @@ def attn_decode_paged(p, x, pos, cache, block_tables, write_pages=None, *,
     new_cache["k"] = cache["k"].at[phys, off].set(kq[:, 0].astype(cache["k"].dtype))
     new_cache["v"] = cache["v"].at[phys, off].set(vq[:, 0].astype(cache["v"].dtype))
 
-    if use_paged_kernel() and not quant:
+    if use_paged_kernel():
         # paged flash-decode kernel: the S-tile index map dereferences the
         # block table, so only owned (and trash-aliased) pages stream
-        # through VMEM — no (B, MP*ps, ...) gather materialized in HBM
+        # through VMEM — no (B, MP*ps, ...) gather materialized in HBM.
+        # Int8 pools pass their scale pages for in-kernel dequant (the
+        # quantized case used to silently drop to the oracle below).
         from repro.kernels.decode_attn.ops import paged_decode_attn
-        out = paged_decode_attn(q[:, 0], new_cache["k"], new_cache["v"],
-                                block_tables, pos)
+        _count_paged_backend("decode_kernel")
+        out = paged_decode_attn(
+            q[:, 0], new_cache["k"], new_cache["v"], block_tables, pos,
+            k_scales=new_cache["k_s"] if quant else None,
+            v_scales=new_cache["v_s"] if quant else None)
         y = out.astype(x.dtype).reshape(B, 1, num_heads * head_dim) @ p["wo"]
         return y, new_cache
 
+    _count_paged_backend("decode_oracle")
     # gather the row's pages into its contiguous logical sequence view
     ka = new_cache["k"][block_tables].reshape(B, MP * ps, num_kv_heads, head_dim)
     va = new_cache["v"][block_tables].reshape(B, MP * ps, num_kv_heads, head_dim)

@@ -498,11 +498,17 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
     Global-attention layers share a page pool — their leaves get shape
     (num_pages + 1, page_size, KV, hd), where physical page ``num_pages``
     is the shared *trash* page that unowned block-table entries alias.
-    Every other leaf family (sliding-window ring caches, recurrent /
-    RWKV-6 state, cross-attention K/V) keeps its per-row layout: those
-    states are O(window) or O(1) in sequence, so paging them would buy
-    nothing. One block table therefore addresses every global layer — a
-    logical page maps to the same physical index in each layer's pool."""
+    With ``cfg.kv_cache_dtype == "int8"`` the K/V leaves are int8 and
+    per-token-head fp32 scale leaves ``k_s``/``v_s`` of shape
+    (num_pages + 1, page_size, KV) ride alongside — page-granular, so
+    they follow the same block table through COW copies, prefix sharing,
+    and the Pallas kernels' scalar-prefetched index maps (DESIGN.md
+    §13). Every other leaf family (sliding-window ring caches,
+    recurrent / RWKV-6 state, cross-attention K/V) keeps its per-row
+    layout: those states are O(window) or O(1) in sequence, so paging
+    them would buy nothing. One block table therefore addresses every
+    global layer — a logical page maps to the same physical index in
+    each layer's pool."""
     dtype = jnp.dtype(cfg.dtype)
     pattern = cfg.layer_pattern
     P = len(pattern)

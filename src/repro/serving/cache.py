@@ -93,13 +93,23 @@ def cache_bytes(cache) -> int:
                for leaf in jax.tree.leaves(cache))
 
 
-def _kv_itemsize(cfg) -> float:
-    """Per-element KV byte cost, quantization-aware (int8 values + the
-    amortized per-token-head fp32 scale)."""
-    it = jnp.dtype(cfg.dtype).itemsize
+def _kv_token_bytes(cfg) -> int:
+    """Exact bytes one (token, kv-head) K *or* V entry costs: hd values
+    in the cache dtype, plus one fp32 absmax scale per token-head when
+    quantized. Integer math — the old amortized-per-element float
+    (``1 + 4/hd``) drifted under ``int()`` truncation whenever the head
+    dim wasn't a power of two, so accounting disagreed with the
+    allocator's ``leaf.nbytes`` truth."""
+    hd = cfg.resolved_head_dim
     if cfg.kv_cache_dtype == "int8":
-        return 1.0 + 4.0 / cfg.resolved_head_dim
-    return it
+        return hd * 1 + 4                      # int8 values + fp32 scale
+    return hd * jnp.dtype(cfg.dtype).itemsize
+
+
+def _kv_itemsize(cfg) -> float:
+    """Per-element KV byte cost (quantization-aware), kept for display /
+    ratio math; byte *accounting* uses the exact :func:`_kv_token_bytes`."""
+    return _kv_token_bytes(cfg) / cfg.resolved_head_dim
 
 
 def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int, *,
@@ -115,17 +125,17 @@ def used_cache_bytes(cfg, rows: int, pos: int, max_seq: int, *,
     the paged scheduler charges that part from allocator truth instead
     (owned pages × :func:`page_bytes`, shared pages once)."""
     it = jnp.dtype(cfg.dtype).itemsize
-    it_kv = _kv_itemsize(cfg)
+    tb_kv = _kv_token_bytes(cfg)
     hd = cfg.resolved_head_dim
     total = 0
     for bt in cfg.block_types():
         if bt == "global":
             if skip_global:
                 continue
-            total += rows * min(pos, max_seq) * cfg.num_kv_heads * hd * 2 * it_kv
+            total += rows * min(pos, max_seq) * cfg.num_kv_heads * 2 * tb_kv
         elif bt == "local":
             w = min(cfg.window_size, max_seq)
-            total += rows * min(pos, w) * cfg.num_kv_heads * hd * 2 * it_kv
+            total += rows * min(pos, w) * cfg.num_kv_heads * 2 * tb_kv
         elif bt == "recurrent":
             total += rows * (cfg.d_model * 4 + cfg.d_model * 3 * it)  # h fp32 + conv
         elif bt == "rwkv6":
@@ -645,12 +655,14 @@ def install_rows_aux(cfg, pool, row_idx, aux):
 
 def page_bytes(cfg, page_size: int) -> int:
     """Bytes one physical page holds across every global-attention layer
-    (K + V, quantization-aware) — the unit of the paged allocator's own
-    byte accounting."""
-    it_kv = _kv_itemsize(cfg)
+    (K + V values plus, under int8, the per-token-head fp32 scale
+    leaves) — the unit of the paged allocator's own byte accounting.
+    Exact integer math: ``page_bytes(cfg, ps) * num_pages`` equals the
+    summed ``leaf.nbytes`` of the pool's global-layer leaves (minus the
+    trash page)."""
     n_global = sum(1 for bt in cfg.block_types() if bt == "global")
-    return int(n_global * page_size * cfg.num_kv_heads
-               * cfg.resolved_head_dim * 2 * it_kv)
+    return (n_global * page_size * cfg.num_kv_heads * 2
+            * _kv_token_bytes(cfg))
 
 
 def bucket_chain(n: int) -> List[int]:

@@ -125,10 +125,11 @@ def prefill_chunked(params, cfg: ModelConfig, prompt: np.ndarray,
                     max_seq: int, chunk: int):
     """One-request chunked prefill of a batch-1 contiguous cache: the
     engine-loop twin of the scheduler's PREFILLING state. Returns
-    (last-position logits (V,), cache) — with an all-'global' /
-    'rwkv6' / 'recurrent' layer pattern the logits are bitwise equal to
-    :func:`_prefill_one`'s; sliding-window layers are allclose (the ring
-    holds the same keys in a different chunk arrangement)."""
+    (last-position logits (V,), cache) — bitwise equal to
+    :func:`_prefill_one`'s on every layer pattern: sliding-window ring
+    histories are re-gathered into ascending logical order before
+    attention, so the chunk arrangement cannot perturb reduction order
+    (DESIGN.md §6)."""
     if chunk < 1:
         raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
     if not chunkable(cfg):

@@ -1282,6 +1282,11 @@ class PagedScheduler(_SchedulerBase):
         Defaults to ``rows * max_seq / page_size`` (no page pressure);
         set lower to serve more rows than a contiguous pool of the same
         byte budget could.
+    page_budget_bytes : alternative memory knob — an HBM byte budget
+        for the global-layer page pool, converted to ``num_pages`` via
+        allocator-truth :func:`cache.page_bytes` (so an int8
+        ``kv_cache_dtype`` yields ≈2× the pages of fp32/bf16 under the
+        same budget). Mutually exclusive with ``num_pages``.
     max_bypass : SJF aging bound (see above).
     prefix_cache : enable the cross-request radix prefix cache
         (DESIGN.md §7). Completed/preempted requests publish their
@@ -1306,8 +1311,19 @@ class PagedScheduler(_SchedulerBase):
                  max_retries: int = 3, retry_backoff: int = 2,
                  max_queue: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 event_sink: Optional[Callable[[TokenEvent], None]] = None):
+                 event_sink: Optional[Callable[[TokenEvent], None]] = None,
+                 page_budget_bytes: Optional[int] = None):
         max_seq = -(-max_seq // page_size) * page_size
+        if page_budget_bytes is not None:
+            if num_pages is not None:
+                raise ValueError("pass num_pages or page_budget_bytes, "
+                                 "not both")
+            num_pages = page_budget_bytes \
+                // cache_lib.page_bytes(cfg, page_size)
+            if num_pages < 1:
+                raise ValueError(
+                    f"page_budget_bytes={page_budget_bytes} below one "
+                    f"page ({cache_lib.page_bytes(cfg, page_size)}B)")
         super().__init__(params, cfg, kcfg, rows=rows, max_seq=max_seq,
                          method=method, eos_id=eos_id, bos_id=bos_id,
                          frontend=frontend, strategy_factory=strategy_factory,

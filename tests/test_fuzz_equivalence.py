@@ -185,6 +185,20 @@ def test_fuzz_equivalence_small(setup):
     _run_case(setup, case)
 
 
+def test_fuzz_equivalence_int8_small(setup):
+    """The tier-1 case replayed with a quantized KV cache: all six
+    serving modes must stay token-for-token equal to the (also int8)
+    sequential reference — COW, preemption replay and the prefix cache
+    move quantized pages plus their scale leaves, never re-rounding."""
+    import dataclasses
+    cfg, params, kcfg = setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    case = {"seed": 7,
+            "reqs": [("kappa", 8, 10), ("greedy", 3, 6), ("bon", 9, 6)],
+            "order": [1, 0, 2], "chunk": 5, "pre_len": 8}
+    _run_case((cfg8, params, kcfg), case)
+
+
 def test_fuzz_equivalence_stbon_aligned(setup):
     """Second fixed tier-1 case: ST-BoN in the mix, prompt length an
     exact multiple of both page size and chunk."""

@@ -5,8 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attn.ops import decode_attn, paged_decode_attn
-from repro.kernels.decode_attn.ref import decode_attn_ref, paged_decode_attn_ref
+from repro.kernels.decode_attn.ops import (decode_attn, paged_decode_attn,
+                                           paged_prefill_attn)
+from repro.kernels.decode_attn.ref import (decode_attn_ref,
+                                           paged_decode_attn_ref,
+                                           paged_prefill_attn_ref)
 from repro.kernels.fused_score.ops import fused_score
 from repro.kernels.fused_score.ref import fused_score_ref
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
@@ -102,6 +105,106 @@ def test_paged_decode_attn_sweep(B, H, KV, hd, ps, MP, P, dtype):
     tol = 2e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol)
+
+
+def _quantize_pages(x):
+    """Per-(page, slot, kv-head) absmax int8 quantization — the same
+    layout the serving cache uses for its ``k_s``/``v_s`` scale leaves."""
+    x = np.asarray(x, np.float32)
+    s = np.maximum(np.abs(x).max(axis=-1), 1e-8) / 127.0
+    q = np.clip(np.round(x / s[..., None]), -127, 127).astype(np.int8)
+    return jnp.asarray(q), jnp.asarray(s.astype(np.float32))
+
+
+def _scrambled_tables(rng, B, MP, P, ps, pos):
+    """Owned pages drawn without replacement, tails alias the trash page
+    (index P-1) — same convention as the fp sweep above."""
+    bt = np.full((B, MP), P - 1, np.int32)
+    for b in range(B):
+        owned = int(pos[b]) // ps + 1
+        bt[b, :owned] = rng.choice(P - 1, size=owned, replace=False)
+    return bt
+
+
+@pytest.mark.parametrize("B,H,KV,hd,ps,MP,P", [
+    (2, 8, 2, 64, 16, 4, 12),     # GQA
+    (1, 4, 4, 32, 8, 8, 10),      # MHA, many small pages
+    (2, 4, 1, 64, 64, 3, 7),      # MQA, page = S-tile
+])
+def test_paged_decode_attn_int8_sweep(B, H, KV, hd, ps, MP, P):
+    """Int8 paged kernel vs the int8-aware oracle: both dequantize the
+    same int8 pages with the same scales, so the comparison is tight.
+    A loose check against the unquantized oracle bounds the actual
+    quantization error."""
+    rng = np.random.RandomState(B * H + ps + 1)
+    ks = jax.random.split(jax.random.PRNGKey(hash((B, H, ps, MP, 8)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd))
+    kq, ksc = _quantize_pages(kp)
+    vq, vsc = _quantize_pages(vp)
+    pos = rng.randint(0, MP * ps, size=B).astype(np.int32)
+    bt = _scrambled_tables(rng, B, MP, P, ps, pos)
+    out = paged_decode_attn(q, kq, vq, jnp.asarray(bt), jnp.asarray(pos),
+                            k_scales=ksc, v_scales=vsc)
+    ref = paged_decode_attn_ref(q, kq, vq, jnp.asarray(bt), jnp.asarray(pos),
+                                k_scales=ksc, v_scales=vsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    full = paged_decode_attn_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("B,C,H,KV,hd,ps,MP,P", [
+    (2, 4, 8, 2, 64, 16, 4, 12),  # GQA, mid-size chunk
+    (1, 7, 4, 4, 32, 8, 8, 10),   # MHA, chunk not a page multiple
+    (2, 1, 4, 1, 64, 16, 3, 7),   # MQA, single-token chunk (= decode)
+    (1, 16, 6, 3, 128, 32, 2, 8), # odd head count, chunk = half a page
+])
+@pytest.mark.parametrize("quant", [False, True])
+def test_paged_prefill_attn_sweep(B, C, H, KV, hd, ps, MP, P, quant):
+    """Paged chunk-prefill kernel vs the pure-jnp causal oracle: random
+    chunk offsets ``pos0`` (chunk straddles page boundaries), scrambled
+    block tables, fp32 and int8 pages."""
+    rng = np.random.RandomState(B * C + ps)
+    ks = jax.random.split(jax.random.PRNGKey(hash((B, C, H, ps)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, C, H, hd))
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd))
+    # pos0 = position of the chunk's FIRST token; last token must fit
+    pos0 = rng.randint(0, MP * ps - C + 1, size=B).astype(np.int32)
+    last = pos0 + C - 1
+    bt = _scrambled_tables(rng, B, MP, P, ps, last)
+    if quant:
+        kp, ksc = _quantize_pages(kp)
+        vp, vsc = _quantize_pages(vp)
+    else:
+        ksc = vsc = None
+    out = paged_prefill_attn(q, kp, vp, jnp.asarray(bt), jnp.asarray(pos0),
+                             k_scales=ksc, v_scales=vsc)
+    ref = paged_prefill_attn_ref(q, kp, vp, jnp.asarray(bt),
+                                 jnp.asarray(pos0),
+                                 k_scales=ksc, v_scales=vsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_prefill_single_token_matches_decode():
+    """A one-token chunk through the prefill entry equals the decode
+    entry bitwise — they share one kernel body."""
+    B, H, KV, hd, ps, MP, P = 2, 8, 2, 64, 16, 4, 12
+    rng = np.random.RandomState(0)
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd))
+    pos = rng.randint(0, MP * ps, size=B).astype(np.int32)
+    bt = _scrambled_tables(rng, B, MP, P, ps, pos)
+    d = paged_decode_attn(q, kp, vp, jnp.asarray(bt), jnp.asarray(pos))
+    p = paged_prefill_attn(q[:, None], kp, vp, jnp.asarray(bt),
+                           jnp.asarray(pos))
+    assert np.array_equal(np.asarray(d), np.asarray(p[:, 0]))
 
 
 def test_paged_decode_attn_matches_contiguous_kernel():

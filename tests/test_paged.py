@@ -595,18 +595,15 @@ def test_sjf_aging_prevents_starvation(setup):
 
 # ----------------------------------------------- paged kernel wiring
 
-def test_attn_decode_paged_kernel_wiring(setup):
-    """attn_decode_paged routes through paged_decode_attn_pallas when
-    the kernel path is enabled (forced here, running the Pallas
-    interpreter on CPU) and matches the jnp gather oracle."""
-    from repro.models import attention as attn_mod
-    cfg, params, kcfg, prompts, _ = setup
+def _paged_decode_fixture(setup, cfg):
+    """Install a prefilled prompt into a fresh paged pool; returns the
+    pieces a decode_step call needs."""
+    _, params, _, prompts, _ = setup
     ps, max_seq = 8, 32
     MP = max_seq // ps
     rows, num_pages = 3, 14
     prompt = prompts[0]
     _, c1 = engine._prefill_one(params, cfg, prompt, max_seq)
-
     alloc = PageAllocator(num_pages, ps, rows, MP)
     for r in range(rows):
         alloc.alloc_row(r, MP)
@@ -614,16 +611,238 @@ def test_attn_decode_paged_kernel_wiring(setup):
     pool = cache_lib.install_paged(
         cfg, pool, jnp.arange(rows), jnp.asarray(alloc.block.reshape(-1)),
         cache_lib.broadcast_batch(c1, rows), ps)
-
     pos = jnp.array([len(prompt)] * rows, jnp.int32)
     bt = jnp.asarray(alloc.block)
+    return pool, pos, bt
+
+
+@pytest.mark.parametrize("kv_dtype", ["model", "int8"])
+def test_attn_decode_paged_kernel_wiring(setup, kv_dtype):
+    """attn_decode_paged routes through paged_decode_attn_pallas when
+    the kernel path is enabled (forced here, running the Pallas
+    interpreter on CPU) and matches the jnp gather oracle.
+
+    The backend counters make silent fallback a hard failure: with the
+    kernel forced, not a single layer may take the oracle branch. The
+    int8 case is the regression for the quantized bypass — the old
+    dispatch quietly dropped to the gather oracle whenever the cache was
+    quantized, and the allclose alone never noticed."""
+    import dataclasses
+    from repro.models import attention as attn_mod
+    cfg, params = setup[0], setup[1]
+    if kv_dtype != "model":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    pool, pos, bt = _paged_decode_fixture(setup, cfg)
     toks = jnp.array([5, 9, 7])
     # eager (unjitted) calls so the kernel toggle takes effect per call
     lo, _ = decode_step(params, cfg, toks, pos, pool, bt)
+    attn_mod.reset_paged_backend_counts()
     attn_mod.set_paged_kernel(True)
     try:
         lk, _ = decode_step(params, cfg, toks, pos, pool, bt)
     finally:
         attn_mod.set_paged_kernel(None)
+    counts = attn_mod.paged_backend_counts()
+    assert counts["decode_kernel"] >= 1, "kernel path never taken"
+    assert counts["decode_oracle"] == 0, \
+        f"silent fallback to the gather oracle: {counts}"
     np.testing.assert_allclose(np.asarray(lk), np.asarray(lo),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["model", "int8"])
+def test_attn_prefill_chunk_paged_kernel_wiring(setup, kv_dtype):
+    """Chunked paged prefill routes through paged_prefill_attn_pallas
+    when the kernel path is forced — backend counters prove no layer
+    fell back to the jnp gather oracle — and the last-chunk logits match
+    the oracle run."""
+    import dataclasses
+    from repro.models import attention as attn_mod
+    from repro.models import init_cache, prefill_chunk
+    cfg, params, _, prompts, max_seq = setup
+    if kv_dtype != "model":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    prompt, ps, chunk, num_pages = prompts[1], 4, 3, 12
+    MP = -(-max_seq // ps)
+
+    def run_prefill():
+        alloc = PageAllocator(num_pages, ps, rows=2, max_pages=MP)
+        pool = init_paged_cache(cfg, 2, num_pages, ps, MP * ps)
+        aux = init_cache(cfg, 1, 1)
+        logits, filled = None, 0
+        while filled < len(prompt):
+            piece = prompt[filled:filled + chunk]
+            need = alloc.pages_for(filled + len(piece))
+            while int(alloc.owned[0]) < need:
+                if int(alloc.owned[0]) == 0:
+                    alloc.set_row_pages(0, alloc.alloc_pages(1))
+                else:
+                    alloc.append_page(0)
+            qpos = np.arange(filled, filled + len(piece))
+            cpages = alloc.block[0][qpos // ps]
+            logits, pool, aux = prefill_chunk(
+                params, cfg, jnp.asarray(piece)[None],
+                jnp.full((1,), filled, jnp.int32), 0, pool,
+                jnp.asarray(alloc.block[0:1]),
+                jnp.asarray(cpages.astype(np.int32))[None], aux)
+            filled += len(piece)
+        return np.asarray(logits)
+
+    lo = run_prefill()
+    attn_mod.reset_paged_backend_counts()
+    attn_mod.set_paged_kernel(True)
+    try:
+        lk = run_prefill()
+    finally:
+        attn_mod.set_paged_kernel(None)
+    counts = attn_mod.paged_backend_counts()
+    assert counts["prefill_kernel"] >= 1, "prefill kernel path never taken"
+    assert counts["prefill_oracle"] == 0, \
+        f"silent fallback to the gather oracle: {counts}"
+    np.testing.assert_allclose(lk, lo, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- int8 paged serving
+
+def _paged_leaf_axis(leaf, num_pages):
+    """Axis of the physical-page dimension in a paged global leaf, or
+    None for per-row leaves. Pools may stack layers (leading K axis)."""
+    if leaf.ndim >= 1 and leaf.shape[0] == num_pages + 1:
+        return 0
+    if leaf.ndim >= 2 and leaf.shape[1] == num_pages + 1:
+        return 1
+    return None
+
+
+@pytest.mark.parametrize("kv_dtype", ["model", "int8"])
+def test_page_bytes_matches_leaf_nbytes(setup, kv_dtype):
+    """page_bytes() is allocator truth, not an estimate: summed over the
+    pool's global-layer leaves (values AND the int8 scale leaves, minus
+    the trash page) it equals num_pages * page_bytes exactly. The old
+    amortized float cost (1 + 4/hd per element) drifted under int()."""
+    import dataclasses
+    cfg = setup[0]
+    if kv_dtype != "model":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    ps, num_pages, rows, max_seq = 8, 14, 3, 32
+    pool = init_paged_cache(cfg, rows, num_pages, ps, max_seq)
+    per_page = 0
+    for leaf in jax.tree.leaves(pool):
+        ax = _paged_leaf_axis(leaf, num_pages)
+        if ax is not None:
+            assert leaf.nbytes % (num_pages + 1) == 0
+            per_page += leaf.nbytes // (num_pages + 1)
+    assert per_page > 0, "no paged global leaves found"
+    assert cache_lib.page_bytes(cfg, ps) == per_page
+    assert cache_lib.page_bytes(cfg, ps) * num_pages \
+        == per_page * num_pages
+
+
+def test_int8_scale_leaves_ride_cow_paths(setup):
+    """COW plumbing carries the quantization scales: install_paged_shared
+    scatters k_s/v_s page-wise next to the int8 values (staying float32 —
+    an astype into the value dtype would truncate them to garbage), and
+    copy_pages duplicates them onto the boundary COW copy."""
+    import dataclasses
+    from jax.tree_util import keystr, tree_flatten_with_path
+    cfg = dataclasses.replace(setup[0], kv_cache_dtype="int8")
+    params, prompts = setup[1], setup[3]
+    prompt = prompts[1]                 # len 9 @ ps=4: 2 full + boundary
+    ps, num_pages, max_seq, n = 4, 12, 32, 2
+    _, c1 = engine._prefill_one(params, cfg, prompt, max_seq)
+    pool = init_paged_cache(cfg, n, num_pages, ps, max_seq)
+    # shared map: full prompt pages 0,1 once; boundary page 2 per branch
+    src_idx = np.asarray([0, 1, 2, 2], np.int32)
+    phys = np.asarray([0, 1, 2, 3], np.int32)
+    pool = cache_lib.install_paged_shared(
+        cfg, pool, jnp.arange(n), jnp.asarray(src_idx), jnp.asarray(phys),
+        c1, ps)
+    sub = {keystr(p): l for p, l in tree_flatten_with_path(c1)[0]}
+    checked = 0
+    for path, a in tree_flatten_with_path(pool)[0]:
+        key = keystr(path)
+        if "k_s" not in key and "v_s" not in key:
+            continue
+        ax = _paged_leaf_axis(a, num_pages)
+        if ax is None:
+            continue                    # per-row aux scales (ring layers)
+        assert a.dtype == jnp.float32, f"{key} truncated to {a.dtype}"
+        b = np.asarray(sub[key])
+        if ax == 0:                     # b: (1, S, KV)
+            br = b[0].reshape((b.shape[1] // ps, ps) + b.shape[2:])
+            got, want = np.asarray(a)[phys], br[src_idx]
+        else:                           # stacked, b: (K, 1, S, KV)
+            br = b[:, 0].reshape((b.shape[0], b.shape[2] // ps, ps)
+                                 + b.shape[3:])
+            got, want = np.asarray(a)[:, phys], br[:, src_idx]
+        assert np.array_equal(got, want), f"{key} scales mangled"
+        checked += 1
+    assert checked >= 2, "int8 pool grew no paged scale leaves"
+    # COW page copy carries every global leaf, scales included
+    pool2 = cache_lib.copy_pages(cfg, pool, jnp.asarray([2]),
+                                 jnp.asarray([7]))
+    for (path, a2), (_, a) in zip(tree_flatten_with_path(pool2)[0],
+                                  tree_flatten_with_path(pool)[0]):
+        ax = _paged_leaf_axis(a2, num_pages)
+        if ax is None:
+            continue
+        a2, a = np.asarray(a2), np.asarray(a)
+        if ax == 0:
+            assert np.array_equal(a2[7], a[2]), keystr(path)
+        else:
+            assert np.array_equal(a2[:, 7], a[:, 2]), keystr(path)
+
+
+def test_paged_scheduler_int8_mixed_matches_sequential(setup):
+    """Token-for-token int8 serving: a mixed kappa/bon/stbon/greedy
+    paged pool with a quantized cache reproduces the sequential engine
+    (also int8) exactly — paging moves quantized bytes and their scales,
+    it never re-rounds them."""
+    import dataclasses
+    cfg, params, kcfg, prompts, max_seq = setup
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    specs = [("kappa", 20), ("bon", 12), ("stbon", 12), ("greedy", 16)]
+    seq = []
+    for i, (m, mn) in enumerate(specs):
+        kc = dataclasses.replace(kcfg, max_new_tokens=mn)
+        fn = getattr(engine, f"generate_{m}")
+        seq.append(fn(params, cfg8, kc, prompts[i % len(prompts)],
+                      jax.random.PRNGKey(i), eos_id=tok.EOS, bos_id=tok.BOS,
+                      max_seq=max_seq))
+    sched = PagedScheduler(params, cfg8, kcfg, rows=10, max_seq=max_seq,
+                           page_size=8, num_pages=48, method="kappa",
+                           eos_id=tok.EOS, bos_id=tok.BOS)
+    rids = [sched.submit(prompts[i % len(prompts)], jax.random.PRNGKey(i),
+                         max_new=mn, method=m)
+            for i, (m, mn) in enumerate(specs)]
+    res = sched.run()
+    for s, rid, (m, _) in zip(seq, rids, specs):
+        assert s.tokens == res[rid].tokens, f"{m} diverged under int8"
+        assert s.logical_tokens == res[rid].logical_tokens
+        assert s.steps == res[rid].steps
+    assert sched.alloc.free_count == sched.num_pages
+    assert sorted(sched.free) == list(range(10))
+    _check_invariants(sched.alloc)
+
+
+def test_page_budget_bytes_capacity(setup):
+    """Admission capacity follows page_bytes: at one fixed HBM budget an
+    int8 pool holds ~2x the pages of the model-dtype pool (exactly
+    2 * hd / (hd + 4) more), and passing both num_pages and a budget is
+    rejected."""
+    import dataclasses
+    cfg, params, kcfg, prompts, max_seq = setup
+    budget = 64 * cache_lib.page_bytes(cfg, 8)
+    s_fp = PagedScheduler(params, cfg, kcfg, rows=4, max_seq=max_seq,
+                          page_size=8, page_budget_bytes=budget,
+                          method="kappa", eos_id=tok.EOS, bos_id=tok.BOS)
+    assert s_fp.num_pages == 64
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    s_i8 = PagedScheduler(params, cfg8, kcfg, rows=4, max_seq=max_seq,
+                          page_size=8, page_budget_bytes=budget,
+                          method="kappa", eos_id=tok.EOS, bos_id=tok.BOS)
+    assert s_i8.num_pages >= int(1.8 * s_fp.num_pages)
+    with pytest.raises(ValueError):
+        PagedScheduler(params, cfg, kcfg, rows=4, max_seq=max_seq,
+                       page_size=8, num_pages=64, page_budget_bytes=budget,
+                       method="kappa", eos_id=tok.EOS, bos_id=tok.BOS)

@@ -21,9 +21,15 @@ def test_int8_cache_decode_close_to_fp(arch):
     logits, _ = train_logits(params, cfg, tokens)
     cache = init_cache(cfg, B, max_seq=32)
     pf, cache = prefill(params, cfg, tokens[:, :S - 1], cache)
-    # prefill attention is computed pre-quantization → exact
-    np.testing.assert_allclose(np.asarray(pf), np.asarray(logits[:, S - 2]),
-                               rtol=2e-4, atol=2e-4)
+    # prefill attends over the dequantized cache — the same values every
+    # serving mode (one-shot, chunked, paged) and decode see, so int8
+    # results never depend on how a prompt was admitted. The price is
+    # that prefill logits carry quantization noise like decode does:
+    # close to fp, not exact.
+    a, b = np.asarray(pf).ravel(), np.asarray(logits[:, S - 2]).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.999, f"int8 prefill drifted: corr={corr}"
+    assert np.max(np.abs(a - b)) < 0.5
     dec, _ = decode_step(params, cfg, tokens[:, S - 1], jnp.int32(S - 1), cache)
     a, b = np.asarray(dec).ravel(), np.asarray(logits[:, S - 1]).ravel()
     corr = np.corrcoef(a, b)[0, 1]
